@@ -1,0 +1,32 @@
+"""Paper Fig 2A: learning performance across the four graph families
+(Erdos-Renyi, scale-free, small-world, fully-connected), same density.
+Paper setting: MuJoCo Ant, 100 agents. Here: rastrigin-64d + pendulum,
+reduced populations (see common.py scale note).
+"""
+from __future__ import annotations
+
+import time
+
+from . import common
+
+FAMILIES = ["erdos_renyi", "scale_free", "small_world", "fully_connected"]
+
+
+def run(quick: bool = False):
+    n, iters, seeds = (16, 30, range(2)) if quick else (40, 60, range(2))
+    results = {}
+    for task in ["cartpole_swingup"]:
+        t0 = time.time()
+        res = common.compare(task, FAMILIES, n, iters, seeds)
+        results[task] = res
+        er = res["erdos_renyi"]["mean"]
+        fc = res["fully_connected"]["mean"]
+        best = max(res, key=lambda f: res[f]["mean"])
+        common.emit(f"fig2a.{task.replace(':', '_')}", time.time() - t0,
+                    f"best={best} er={er:.2f} fc={fc:.2f}")
+    common.save_result("fig2a_families", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Fig 2B/C: an N-agent Erdos-Renyi population vs LARGER
+fully-connected populations (paper: ER-1000 ≈ FC-3000 on Roboschool
+Humanoid). Here: ER at N vs FC at {N, 2N, 3N} on rastrigin-64d.
+"""
+from __future__ import annotations
+
+import time
+
+from . import common
+
+
+def run(quick: bool = False):
+    n, iters, seeds = (12, 30, range(2)) if quick else (24, 60, range(2))
+    task = "cartpole_swingup"
+    t0 = time.time()
+    er = common.compare(task, ["erdos_renyi"], n, iters, seeds)
+    rows = {"er": {"n": n, **er["erdos_renyi"]}, "fc": {}}
+    for mult in (1, 3):
+        fc = common.compare(task, ["fully_connected"], n * mult, iters,
+                            seeds)
+        rows["fc"][f"n={n * mult}"] = fc["fully_connected"]
+    er_score = rows["er"]["mean"]
+    fc3 = rows["fc"][f"n={n * 3}"]["mean"]
+    common.emit("fig2b.size_sweep", time.time() - t0,
+                f"er@{n}={er_score:.2f} fc@{3 * n}={fc3:.2f}")
+    common.save_result("fig2b_size_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

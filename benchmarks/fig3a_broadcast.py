@@ -1,0 +1,33 @@
+"""Paper Fig 3A: broadcast-only control — disconnected agents (A = I) with
+any broadcast probability do not learn; the topology is what matters.
+"""
+from __future__ import annotations
+
+import time
+
+from . import common
+
+
+def run(quick: bool = False):
+    n, iters, seeds = (16, 30, range(2)) if quick else (40, 60, range(2))
+    task = "cartpole_swingup"
+    t0 = time.time()
+    rows = {}
+    for p_b in ([0.0, 0.8] if quick else [0.0, 0.8]):
+        res = common.compare(task, ["disconnected"], n, iters, seeds,
+                             p_broadcast=p_b)
+        rows[f"disconnected_pb={p_b}"] = res["disconnected"]
+    for fam in ["erdos_renyi", "fully_connected"]:
+        res = common.compare(task, [fam], n, iters, seeds, p_broadcast=0.8)
+        rows[fam] = res[fam]
+    er = rows["erdos_renyi"]["mean"]
+    disc = max(v["mean"] for k, v in rows.items()
+               if k.startswith("disconnected"))
+    common.emit("fig3a.broadcast", time.time() - t0,
+                f"er={er:.2f} best_disconnected={disc:.2f}")
+    common.save_result("fig3a_broadcast", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

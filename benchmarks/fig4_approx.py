@@ -1,0 +1,46 @@
+"""Paper Fig 4 / Appendix Fig 6: measured reachability & homogeneity vs the
+Lemma 7.2 closed-form approximations across density p (n = 1000 as in the
+paper; reduced seeds).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import topology
+
+from . import common
+
+
+def run(quick: bool = False):
+    n, n_seeds = (200, 2) if quick else (1000, 3)
+    ps = [0.2, 0.4, 0.6, 0.8] if quick else \
+        [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    t0 = time.time()
+    rows = []
+    for p in ps:
+        reach = np.mean([topology.reachability(
+            topology.erdos_renyi(n, p=p, seed=s, connect=False))
+            for s in range(n_seeds)])
+        hom = np.mean([topology.homogeneity(
+            topology.erdos_renyi(n, p=p, seed=s, connect=False))
+            for s in range(n_seeds)])
+        rows.append({
+            "p": p,
+            "reachability": float(reach),
+            "reachability_approx": topology.reachability_approx(n, p),
+            "reachability_large_n": 1.0 / (p * np.sqrt(n)),
+            "homogeneity": float(hom),
+            "homogeneity_approx": topology.homogeneity_approx(n, p),
+        })
+    max_rel = max(abs(r["reachability"] - r["reachability_approx"])
+                  / r["reachability"] for r in rows if r["p"] >= 0.3)
+    common.emit("fig4.approximations", time.time() - t0,
+                f"n={n} max_rel_err(p>=0.3)={max_rel:.3f}")
+    common.save_result("fig4_approx", {"n": n, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig 5: sparser Erdos-Renyi graphs learn better (reward improvement
+vs fully-connected as density decreases). Paper: Roboschool Humanoid,
+1000 agents. Here: rastrigin-64d.
+"""
+from __future__ import annotations
+
+import time
+
+from . import common
+
+
+def run(quick: bool = False):
+    n, iters, seeds = (16, 30, range(2)) if quick else (32, 60, range(2))
+    densities = [0.2, 0.6, 1.0] if quick else [0.1, 0.5, 1.0]
+    task = "cartpole_swingup"
+    t0 = time.time()
+    fc = common.compare(task, ["fully_connected"], n, iters, seeds)
+    fc_mean = fc["fully_connected"]["mean"]
+    rows = {"fully_connected": fc["fully_connected"]}
+    for p in densities:
+        res = common.compare(task, ["erdos_renyi"], n, iters, seeds,
+                             density=p)
+        r = res["erdos_renyi"]
+        r["improvement_vs_fc"] = r["mean"] - fc_mean
+        rows[f"er_p={p}"] = r
+    sparse = rows[f"er_p={densities[0]}"]["mean"]
+    dense = rows[f"er_p={densities[-1]}"]["mean"]
+    common.emit("fig5.density", time.time() - t0,
+                f"sparse={sparse:.2f} dense={dense:.2f} fc={fc_mean:.2f}")
+    common.save_result("fig5_density", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

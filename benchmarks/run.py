@@ -1,0 +1,66 @@
+"""Benchmark orchestrator — one harness per paper table/figure (+ roofline
+and kernel micro-benches). Prints ``name,us_per_call,derived`` CSV.
+
+  python -m benchmarks.run            # full (reduced-scale) suite
+  python -m benchmarks.run --quick    # smoke-scale
+  python -m benchmarks.run --only table1,fig5
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import time
+import traceback
+
+from . import (fig2a_families, fig2b_size_sweep, fig3a_broadcast,
+               fig3b_controls, fig3c_reach_homog, fig4_approx, fig5_density,
+               kernel_bench, lm_netes, roofline, table1_er_vs_fc)
+
+SUITES = {
+    "fig3c": fig3c_reach_homog,
+    "fig4": fig4_approx,
+    "kernels": kernel_bench,
+    "fig2a": fig2a_families,
+    "table1": table1_er_vs_fc,
+    "fig2b": fig2b_size_sweep,
+    "fig3a": fig3a_broadcast,
+    "fig3b": fig3b_controls,
+    "fig5": fig5_density,
+    "lm": lm_netes,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    t0 = time.time()
+    for name in names:
+        mod = SUITES[name]
+        try:
+            mod.run(quick=args.quick)
+            jax.clear_caches()          # 1-core box: bound jit-cache RAM
+        except Exception as e:                            # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    print(f"total,{(time.time() - t0) * 1e6:.0f},"
+          f"suites={len(names)} failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+def run(quick: bool = False):                             # for tests
+    for mod in SUITES.values():
+        mod.run(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table 1: Erdos-Renyi vs fully-connected on the five benchmark
+tasks (paper: 1000 agents on Mujoco Ant/HalfCheetah/Hopper/Humanoid +
+Roboschool Humanoid). Here: five reduced tasks spanning the same kinds of
+difficulty — three JAX control tasks + two rugged landscapes.
+"""
+from __future__ import annotations
+
+import time
+
+from . import common
+
+TASKS = ["pendulum", "cartpole_swingup", "acrobot",
+         "landscape:rastrigin@2.5", "landscape:ackley@2.5"]
+
+
+def run(quick: bool = False):
+    n, iters, seeds = (16, 25, range(2)) if quick else (40, 60, range(2))
+    tasks = TASKS[:2] + TASKS[3:4] if quick else TASKS
+    rows = {}
+    for task in tasks:
+        t0 = time.time()
+        res = common.compare(task, ["fully_connected", "erdos_renyi"],
+                             n, iters, seeds)
+        er, fc = res["erdos_renyi"]["mean"], res["fully_connected"]["mean"]
+        # paper reports % improvement of ER over FC
+        denom = abs(fc) if abs(fc) > 1e-9 else 1.0
+        improv = 100.0 * (er - fc) / denom
+        rows[task] = {"fully_connected": fc, "erdos_renyi": er,
+                      "improvement_pct": improv,
+                      "fc_ci": res["fully_connected"]["ci95"],
+                      "er_ci": res["erdos_renyi"]["ci95"]}
+        common.emit(f"table1.{task.replace(':', '_')}", time.time() - t0,
+                    f"fc={fc:.2f} er={er:.2f} improv={improv:+.1f}%")
+    common.save_result("table1_er_vs_fc", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Quickstart: NetES in ~40 lines — four communication topologies racing on
+a shifted rastrigin landscape, reproducing the paper's core mechanic.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import netes, topology
+from repro.core.netes import NetESConfig
+from repro.envs import make_landscape_reward_fn
+
+
+def main():
+    n_agents, dim, iters = 32, 32, 80
+    reward_fn = make_landscape_reward_fn("rastrigin@2.5")
+    cfg = NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8)
+
+    print(f"{'topology':20s} {'best reward':>12s}")
+    for family in ["erdos_renyi", "scale_free", "small_world",
+                   "fully_connected"]:
+        kwargs = {"p": 0.5} if family != "fully_connected" else {}
+        adj = jnp.asarray(topology.make_topology(family, n_agents, seed=0,
+                                                 **kwargs))
+        state = netes.init_state(
+            jax.random.PRNGKey(0), n_agents, dim,
+            init_fn=lambda k: jax.random.normal(k, (dim,)))
+        state, metrics = netes.run(state, adj, reward_fn, cfg, iters)
+        print(f"{family:20s} {float(state.best_reward):12.2f}  "
+              f"(reach={topology.reachability(adj):.3f} "
+              f"homog={topology.homogeneity(adj):.3f})")
+
+
+if __name__ == "__main__":
+    main()

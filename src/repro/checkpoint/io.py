@@ -1,0 +1,73 @@
+"""Checkpointing: flat-key npz serialization of arbitrary pytrees + train
+state (step, rng, metrics history). Dependency-free (no orbax offline) and
+deterministic — keys are the joined tree paths.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+_SEP = "::"
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+def save_pytree(path: str | pathlib.Path, tree: Any) -> None:
+    flat, _ = tree_flatten_with_path(tree)
+    arrays = {_path_key(p): np.asarray(v) for p, v in flat}
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str | pathlib.Path, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    data = np.load(path, allow_pickle=False)
+    flat, treedef = tree_flatten_with_path(like)
+    leaves = []
+    for p, ref in flat:
+        key = _path_key(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return tree_unflatten(treedef, [leaf for leaf in leaves])
+
+
+def save_train_state(directory: str | pathlib.Path, step: int, params: Any,
+                     extra: Optional[Dict] = None) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    ckpt = directory / f"step_{step:08d}.npz"
+    save_pytree(ckpt, params)
+    meta = {"step": step, **(extra or {})}
+    (directory / f"step_{step:08d}.json").write_text(json.dumps(meta))
+    (directory / "latest.json").write_text(json.dumps(meta))
+    return ckpt
+
+
+def restore_train_state(directory: str | pathlib.Path,
+                        like: Any) -> Tuple[int, Any]:
+    directory = pathlib.Path(directory)
+    meta = json.loads((directory / "latest.json").read_text())
+    step = meta["step"]
+    params = load_pytree(directory / f"step_{step:08d}.npz", like)
+    return step, params

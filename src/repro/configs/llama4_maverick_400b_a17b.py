@@ -1,0 +1,55 @@
+"""llama4-maverick-400b-a17b [moe] — MoE 128e top-1, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E (assignment citation); Maverick card:
+meta-llama/Llama-4-Maverick-17B-128E].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, 128 experts top-1,
+MoE interleaved every other layer (Maverick's interleave step 2).
+~400 B total parameters ⇒ per-agent replica placement exceeds v5e HBM at
+model-parallel 16; the NetES train step for this arch runs in *consensus*
+parameter placement (DESIGN.md §2, §7.4). ``long_500k`` runs (chunked
+attention, global every 4th layer).
+"""
+import dataclasses
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=128,
+    experts_per_token=1,
+    moe_every=2,
+    attn_kind="chunked",
+    chunk_size=8192,
+    global_every=4,
+    global_offset=3,
+    qk_norm=True,
+    rope_theta=500000.0,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+))
+
+SMOKE = register(dataclasses.replace(
+    CONFIG,
+    name="llama4-maverick-400b-a17b-smoke",
+    num_layers=2,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=512,
+    num_experts=4,
+    experts_per_token=1,
+    moe_every=2,
+    chunk_size=64,
+    global_every=2,
+    global_offset=1,
+    moe_group_size=64,
+))

@@ -1,0 +1,17 @@
+"""The paper's own policy architecture: MLP with two 64-unit tanh hidden
+layers (§5.2, identical to Salimans et al. 2017). Registered so the RL
+reproduction path flows through the same config system as the LLM archs.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="paper-mlp",
+    family="mlp",
+    num_layers=2,
+    d_model=64,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=64,
+    vocab_size=0,
+    source="NetES paper §5.2 / arXiv:1703.03864",
+))

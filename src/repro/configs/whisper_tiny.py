@@ -1,0 +1,50 @@
+"""whisper-tiny [audio] — encoder-decoder with conv frontend (STUB)
+[arXiv:2212.04356]. 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865.
+
+The mel-spectrogram + conv feature extractor is stubbed per the brief:
+``input_specs`` supplies precomputed frame embeddings (B, 1500, d_model).
+Whisper uses pre-LN transformer blocks with GELU MLPs, learned positions,
+LayerNorm. ``long_500k`` skipped (enc-dec; quadratic decoder — DESIGN.md).
+Decode shapes run the decoder with cross-attention to the stub encoder
+output; KV length beyond the model card's native 448 ctx is noted in
+DESIGN.md (shapes are the contract).
+"""
+import dataclasses
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,            # decoder layers
+    encoder_layers=4,
+    encoder_seq=1500,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    ffn_kind="gelu",
+    norm="layernorm",
+    use_rope=False,
+    learned_pos=True,
+    max_position=32768,      # extended beyond the card's 448 for decode_32k
+    frontend="audio",
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+))
+
+SMOKE = register(dataclasses.replace(
+    CONFIG,
+    name="whisper-tiny-smoke",
+    num_layers=2,
+    encoder_layers=2,
+    encoder_seq=64,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=0,
+    d_ff=256,
+    vocab_size=512,
+    max_position=1024,
+))

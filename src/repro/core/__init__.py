@@ -1,0 +1,9 @@
+"""Core: the paper's contribution — topologies + NetES update rule + theory."""
+from . import es_utils, netes, theory, topology
+from .netes import NetESConfig, NetESState, init_state, netes_step, run
+from .topology import TopologySpec, make_topology
+
+__all__ = [
+    "es_utils", "netes", "theory", "topology", "NetESConfig", "NetESState",
+    "init_state", "netes_step", "run", "TopologySpec", "make_topology",
+]

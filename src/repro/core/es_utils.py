@@ -1,0 +1,58 @@
+"""ES machinery shared by standard ES and NetES (Salimans et al. 2017 tricks).
+
+* antithetic (mirrored) sampling — ε and −ε evaluated per sample [Geweke 88]
+* fitness shaping — centered-rank transform of returns [Wierstra et al. 14]
+* weight decay on parameters
+* deterministic per-(agent, iteration) noise streams from a single seed
+
+Everything is jit-safe and shape-polymorphic via standard jnp ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def agent_noise_key(base_key: jax.Array, agent_idx, step) -> jax.Array:
+    """Deterministic per-agent, per-iteration PRNG key.
+
+    Every agent can reconstruct every other agent's ε stream from the shared
+    base seed — the property that lets standard ES communicate only scalar
+    rewards (Salimans et al.) and that our ``seed_replay`` mixing strategy
+    relies on (DESIGN.md §2).
+    """
+    return jax.random.fold_in(jax.random.fold_in(base_key, agent_idx), step)
+
+
+def sample_noise(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+def antithetic_pair(eps: jax.Array) -> jax.Array:
+    """Stack (+ε, −ε) along a leading axis of size 2."""
+    return jnp.stack([eps, -eps], axis=0)
+
+
+def centered_rank(returns: jax.Array) -> jax.Array:
+    """Fitness shaping: map returns to centered uniform ranks in [−.5, .5].
+
+    Matches OpenAI ES `compute_centered_ranks`: double-argsort rank, scaled
+    to [0, 1], minus 0.5. Makes min R = −max R, the normalization the
+    paper's Theorem 7.1 proof assumes.
+    """
+    flat = returns.reshape(-1)
+    ranks = jnp.argsort(jnp.argsort(flat))
+    shaped = ranks.astype(jnp.float32) / (flat.shape[0] - 1) - 0.5
+    return shaped.reshape(returns.shape)
+
+
+def normalize_returns(returns: jax.Array) -> jax.Array:
+    """Plain standardization — alternative shaping for ablations."""
+    mu = returns.mean()
+    sd = returns.std() + 1e-8
+    return (returns - mu) / sd
+
+
+def apply_weight_decay(theta: jax.Array, update: jax.Array, wd: float) -> jax.Array:
+    """u ← u − wd·θ  (decoupled weight decay, as in the OpenAI ES impl)."""
+    return update - wd * theta

@@ -1,0 +1,209 @@
+"""NetES — Networked Evolution Strategies (paper Algorithm 1), single-host.
+
+This module is the *algorithmic* core: a pure-JAX, fully-jittable
+implementation of the NetES iteration over a stacked population
+``thetas: (N, D)``. The distributed (shard_map over the mesh "data" axis)
+version in ``repro/distributed`` reuses the same math with the population
+axis carried by the mesh instead of by an array dimension.
+
+Update rule (paper Eq. 3):
+
+    θ_j ← θ_j + α/(Nσ²) Σ_i a_ij · R̃_i · ((θ_i + σ ε_i) − θ_j)
+
+with R̃ the (optionally rank-shaped) returns. With a_ij ≡ 1 and identical
+θ_i this reduces to standard ES (Eq. 1) — property-tested in
+tests/test_netes_core.py.
+
+Broadcast (paper Algorithm 1): with probability p_b per iteration, every
+agent's θ is replaced by the best perturbed parameter argmax_j R_j
+(θ_j + σ ε_j).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import es_utils
+
+
+@dataclasses.dataclass(frozen=True)
+class NetESConfig:
+    alpha: float = 0.01            # learning rate α
+    sigma: float = 0.02            # noise std σ
+    p_broadcast: float = 0.8       # paper's global broadcast probability
+    weight_decay: float = 0.005
+    fitness_shaping: str = "centered_rank"   # centered_rank | normalize | none
+    antithetic: bool = True
+    # degree normalization: paper Eq. 3 divides by N for every agent. The
+    # proof's intermediate steps use per-agent 1/|A_i| normalization
+    # (Appendix Eq. 9). We default to the paper's main-text 1/N and expose
+    # "degree" for the proof-faithful variant.
+    normalization: str = "global"  # global (1/N) | degree (1/|A_i|)
+
+
+class NetESState(NamedTuple):
+    thetas: jax.Array        # (N, D) per-agent parameters
+    key: jax.Array           # PRNG state
+    step: jax.Array          # iteration counter
+    best_reward: jax.Array   # running max raw reward (for eval protocol)
+    best_theta: jax.Array    # (D,) argmax perturbed params seen so far
+
+
+def init_state(key: jax.Array, n_agents: int, dim: int,
+               init_fn: Optional[Callable[[jax.Array], jax.Array]] = None,
+               same_init: bool = False) -> NetESState:
+    """Initialize per-agent parameters.
+
+    ``same_init=True`` reproduces the standard-ES setting (all agents share
+    θ^(0)); False gives each agent its own draw (paper §2.1 generalization).
+    """
+    key, sub = jax.random.split(key)
+    if init_fn is None:
+        init_fn = lambda k: 0.1 * jax.random.normal(k, (dim,))
+    if same_init:
+        theta0 = init_fn(sub)
+        thetas = jnp.broadcast_to(theta0, (n_agents,) + theta0.shape)
+    else:
+        thetas = jax.vmap(init_fn)(jax.random.split(sub, n_agents))
+    return NetESState(
+        thetas=thetas,
+        key=key,
+        step=jnp.zeros((), jnp.int32),
+        best_reward=jnp.full((), -jnp.inf),
+        best_theta=thetas[0],
+    )
+
+
+def shape_fitness(returns: jax.Array, kind: str) -> jax.Array:
+    if kind == "centered_rank":
+        return es_utils.centered_rank(returns)
+    if kind == "normalize":
+        return es_utils.normalize_returns(returns)
+    if kind == "none":
+        return returns
+    raise ValueError(f"unknown fitness shaping {kind!r}")
+
+
+def mixing_update(adj: jax.Array, thetas: jax.Array, perturbed: jax.Array,
+                  shaped: jax.Array, cfg: NetESConfig) -> jax.Array:
+    """Eq. 3 as a dense contraction over the population.
+
+    u_j = scale_j · Σ_i a_ji R̃_i (perturbed_i − θ_j)
+        = scale_j · ( (A·diag(R̃))ⱼ: @ perturbed  −  (Σ_i a_ji R̃_i) θ_j )
+
+    Cost O(N²·D) — the framework hot spot fused by kernels/netes_mixing.
+    """
+    n = thetas.shape[0]
+    w = adj * shaped[None, :]                     # w[j, i] = a_ji R̃_i
+    wsum = w.sum(axis=1, keepdims=True)           # (N, 1)
+    mixed = w @ perturbed - wsum * thetas         # (N, D)
+    if cfg.normalization == "degree":
+        scale = cfg.alpha / (adj.sum(axis=1, keepdims=True) * cfg.sigma ** 2)
+    else:
+        scale = cfg.alpha / (n * cfg.sigma ** 2)
+    return scale * mixed
+
+
+@partial(jax.jit, static_argnames=("reward_fn", "cfg"))
+def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
+               cfg: NetESConfig) -> Tuple[NetESState, dict]:
+    """One NetES iteration (paper Algorithm 1).
+
+    ``reward_fn(params: (M, D), key) -> (M,)`` evaluates a batch of
+    parameter vectors (episode returns). M = N (or 2N antithetic).
+    """
+    n, dim = state.thetas.shape
+    key, k_eps, k_eval, k_beta = jax.random.split(state.key, 4)
+
+    eps = jax.random.normal(k_eps, (n, dim), dtype=state.thetas.dtype)
+    if cfg.antithetic:
+        # evaluate ±ε; fold the pair back into a single effective sample by
+        # using the return difference (standard mirrored-sampling estimator).
+        pert_pos = state.thetas + cfg.sigma * eps
+        pert_neg = state.thetas - cfg.sigma * eps
+        r_pos = reward_fn(pert_pos, k_eval)
+        r_neg = reward_fn(pert_neg, k_eval)
+        raw = jnp.concatenate([r_pos, r_neg])
+        shaped_all = shape_fitness(raw, cfg.fitness_shaping)
+        shaped = shaped_all[:n] - shaped_all[n:]          # antithetic diff
+        rewards = r_pos                                    # raw, for broadcast/eval
+        perturbed = pert_pos
+    else:
+        perturbed = state.thetas + cfg.sigma * eps
+        rewards = reward_fn(perturbed, k_eval)
+        shaped = shape_fitness(rewards, cfg.fitness_shaping)
+
+    update = mixing_update(adj, state.thetas, perturbed, shaped, cfg)
+    update = es_utils.apply_weight_decay(state.thetas, update, cfg.weight_decay)
+    new_thetas = state.thetas + update
+
+    # ---- broadcast event (exploit) ----
+    best_idx = jnp.argmax(rewards)
+    iter_best_theta = perturbed[best_idx]
+    iter_best_reward = rewards[best_idx]
+    beta = jax.random.uniform(k_beta)
+    do_broadcast = beta < cfg.p_broadcast
+    new_thetas = jnp.where(do_broadcast,
+                           jnp.broadcast_to(iter_best_theta, new_thetas.shape),
+                           new_thetas)
+
+    better = iter_best_reward > state.best_reward
+    new_state = NetESState(
+        thetas=new_thetas,
+        key=key,
+        step=state.step + 1,
+        best_reward=jnp.where(better, iter_best_reward, state.best_reward),
+        best_theta=jnp.where(better, iter_best_theta, state.best_theta),
+    )
+    metrics = {
+        "reward_mean": rewards.mean(),
+        "reward_max": rewards.max(),
+        "reward_min": rewards.min(),
+        "update_var": jnp.var(update, axis=0).sum(),   # Thm 7.1 LHS proxy
+        "broadcast": do_broadcast.astype(jnp.float32),
+        "theta_spread": jnp.var(new_thetas, axis=0).sum(),
+    }
+    return new_state, metrics
+
+
+def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
+        cfg: NetESConfig, num_iters: int) -> Tuple[NetESState, dict]:
+    """lax.scan driver over ``netes_step`` (fully on-device training loop)."""
+
+    def body(s, _):
+        s, m = netes_step(s, adj, reward_fn, cfg)
+        return s, m
+
+    state, metrics = jax.lax.scan(body, state, None, length=num_iters)
+    return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Standard ES (paper Eq. 1) — the fully-connected / shared-θ baseline.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("reward_fn", "cfg", "n_agents"))
+def es_step(theta: jax.Array, key: jax.Array, reward_fn: Callable,
+            cfg: NetESConfig, n_agents: int) -> Tuple[jax.Array, jax.Array, dict]:
+    """One standard-ES iteration on a single global θ (the paper's baseline)."""
+    key, k_eps, k_eval = jax.random.split(key, 3)
+    eps = jax.random.normal(k_eps, (n_agents,) + theta.shape, dtype=theta.dtype)
+    if cfg.antithetic:
+        r_pos = reward_fn(theta[None] + cfg.sigma * eps, k_eval)
+        r_neg = reward_fn(theta[None] - cfg.sigma * eps, k_eval)
+        raw = jnp.concatenate([r_pos, r_neg])
+        shaped_all = shape_fitness(raw, cfg.fitness_shaping)
+        shaped = shaped_all[:n_agents] - shaped_all[n_agents:]
+        rewards = r_pos
+    else:
+        rewards = reward_fn(theta[None] + cfg.sigma * eps, k_eval)
+        shaped = shape_fitness(rewards, cfg.fitness_shaping)
+    grad = (shaped[:, None] * eps).sum(axis=0) / (n_agents * cfg.sigma)
+    update = cfg.alpha * grad
+    update = es_utils.apply_weight_decay(theta, update, cfg.weight_decay)
+    metrics = {"reward_mean": rewards.mean(), "reward_max": rewards.max()}
+    return theta + update, key, metrics

@@ -1,0 +1,117 @@
+"""Numerical implementation of the paper's theory section (§7, Appendix 1/2).
+
+Implements both sides of Theorem 7.1 so tests can check the inequality
+
+    Var_i[u_i]  ≤  max²R/(Nσ⁴) · { (‖A²‖_F / min_l|A_l|²) · f(Θ, Ε)
+                                   − (min_l|A_l| / max_l|A_l|)² · g(Ε) }
+
+numerically on random instances, and exposes the reachability/homogeneity
+statistics + their Erdos-Renyi closed-form approximations (Lemma 7.2) that
+drive Figs. 3C and 4.
+
+All functions here take *numpy or jnp* arrays and stay out of jit — the
+theory module is an analysis tool, not a training hot path.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from .topology import (degrees, homogeneity, homogeneity_approx, reachability,
+                       reachability_approx)
+
+Array = np.ndarray
+
+
+def update_vectors(adj: Array, thetas: Array, epsilons: Array, rewards: Array,
+                   alpha: float, sigma: float) -> Array:
+    """Per-agent update u_i per the sparsely-connected rule (paper Eq. 3).
+
+    Args:
+      adj: (N, N) adjacency. ``adj[i, j]=1`` ⇒ i receives from j.
+      thetas: (N, D) per-agent parameters θ_i.
+      epsilons: (N, D) per-agent perturbations ε_i.
+      rewards: (N,) rewards R(θ_j + σ ε_j).
+    Returns:
+      (N, D) array of updates u_i.
+    """
+    adj = np.asarray(adj, dtype=np.float64)
+    thetas = np.asarray(thetas, dtype=np.float64)
+    epsilons = np.asarray(epsilons, dtype=np.float64)
+    rewards = np.asarray(rewards, dtype=np.float64)
+    n = adj.shape[0]
+    perturbed = thetas + sigma * epsilons               # (N, D)
+    # u_i = α/(Nσ²) Σ_j a_ij R_j (perturbed_j − θ_i)
+    w = adj * rewards[None, :]                          # (N, N): w[i, j]
+    u = w @ perturbed - w.sum(axis=1, keepdims=True) * thetas
+    return (alpha / (n * sigma ** 2)) * u
+
+
+def update_variance(adj, thetas, epsilons, rewards, alpha, sigma) -> float:
+    """LHS of Theorem 7.1: Var over agents of the update vectors.
+
+    The paper treats u_i as a scalar-like quantity in the proof (products of
+    parameter differences). We follow the proof's algebra: Var_i[u_i] with
+    E[u_i u_i] the inner product across the D dimension, i.e. the variance of
+    the update *positions* ("radius of exploration").
+    """
+    u = update_vectors(adj, thetas, epsilons, rewards, alpha, sigma)
+    mean_u = u.mean(axis=0)
+    return float((u * u).sum(axis=1).mean() - (mean_u * mean_u).sum())
+
+
+def f_theta_eps(thetas: Array, epsilons: Array, sigma: float) -> float:
+    """f(Θ, Ε) = sqrt( Σ_{j,k,m} ((θ_j+σε_j−θ_m)·(θ_k+σε_k−θ_m))² )."""
+    thetas = np.asarray(thetas, dtype=np.float64)
+    epsilons = np.asarray(epsilons, dtype=np.float64)
+    perturbed = thetas + sigma * epsilons               # (N, D)
+    # pair[m, j] = (perturbed_j − θ_m) · row-vectors; inner products over D:
+    # G[m, j, k] = (perturbed_j − θ_m)·(perturbed_k − θ_m)
+    diff = perturbed[None, :, :] - thetas[:, None, :]   # (M, J, D)
+    gram = np.einsum("mjd,mkd->mjk", diff, diff)
+    return float(np.sqrt((gram ** 2).sum()))
+
+
+def g_eps(epsilons: Array, sigma: float) -> float:
+    """g(Ε) = σ²/N Σ_{i,j} ε_i·ε_j."""
+    epsilons = np.asarray(epsilons, dtype=np.float64)
+    n = epsilons.shape[0]
+    s = epsilons.sum(axis=0)
+    return float(sigma ** 2 / n * (s * s).sum())
+
+
+def variance_upper_bound(adj, thetas, epsilons, rewards, sigma) -> float:
+    """RHS of Theorem 7.1 (with rewards normalized so min R = −max R)."""
+    adj = np.asarray(adj, dtype=np.float64)
+    n = adj.shape[0]
+    rmax = float(np.abs(np.asarray(rewards)).max())
+    d = degrees(adj)
+    a2 = adj @ adj
+    # √(Σ_jk (A²)_jk): the proof's Cauchy-Schwarz step uses binary a_ij, so
+    # Σ (a_ij a_ik)² = Σ a_ij a_ik — the sum of A² ENTRIES (see
+    # topology.reachability's paper-fidelity note).
+    reach = float(np.sqrt(a2.sum())) / float(d.min()) ** 2
+    homog = float(d.min() / d.max()) ** 2
+    f = f_theta_eps(thetas, epsilons, sigma)
+    g = g_eps(epsilons, sigma)
+    return (rmax ** 2) / (n * sigma ** 4) * (reach * f - homog * g)
+
+
+def graph_statistics(adj: Array) -> Dict[str, float]:
+    return {
+        "reachability": reachability(adj),
+        "homogeneity": homogeneity(adj),
+        "degree_min": float(degrees(adj).min()),
+        "degree_max": float(degrees(adj).max()),
+        "degree_mean": float(degrees(adj).mean()),
+    }
+
+
+def er_approximations(n: int, p: float) -> Dict[str, float]:
+    """Lemma 7.2 closed forms (and the large-n simplification ρ≈1/(p√n))."""
+    return {
+        "reachability_approx": reachability_approx(n, p),
+        "reachability_large_n": 1.0 / (p * np.sqrt(n)),
+        "homogeneity_approx": homogeneity_approx(n, p),
+    }

@@ -1,0 +1,3 @@
+from .synthetic import make_batch, synthetic_batch_iterator
+
+__all__ = ["make_batch", "synthetic_batch_iterator"]

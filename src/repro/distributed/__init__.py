@@ -1,0 +1,8 @@
+"""Distributed runtime. Import submodules directly (``from
+repro.distributed import netes_dist``) — the package __init__ only exposes
+the dependency-free sharding context to avoid import cycles with
+repro.models (model code uses ``maybe_constrain``).
+"""
+from .context import maybe_constrain, sharding_context
+
+__all__ = ["maybe_constrain", "sharding_context"]

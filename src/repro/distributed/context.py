@@ -1,0 +1,46 @@
+"""Sharding context: lets model code request activation sharding constraints
+without threading mesh objects through every layer.
+
+Model code calls ``maybe_constrain(x, role)``; if a context is active the
+named role resolves to a PartitionSpec and a ``with_sharding_constraint``
+is applied, otherwise it is a no-op (single-device tests/examples).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current() -> Optional[Dict]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, roles: Dict[str, P]):
+    """roles: role name → PartitionSpec, e.g. {"residual": P(None, None,
+    "model", None)} (leading dims must match the tensors the model passes)."""
+    prev = current()
+    _STATE.ctx = {"mesh": mesh, "roles": roles}
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def maybe_constrain(x: jax.Array, role: str) -> jax.Array:
+    ctx = current()
+    if ctx is None or role not in ctx["roles"]:
+        return x
+    spec = ctx["roles"][role]
+    if spec is None:
+        return x
+    # pad the spec with None for unmentioned trailing dims
+    parts = tuple(spec) + (None,) * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], P(*parts)))

@@ -1,0 +1,364 @@
+"""Distributed NetES training steps + serve steps (pjit-level).
+
+Three step builders, matching the sharding modes in ``sharding.py``:
+
+* ``make_replica_train_step`` — paper-faithful NetES: the agent population
+  lives on the mesh data axes; params carry a leading agent axis. The
+  perturbed parameters are NEVER materialized as a second full tree: noise
+  is (re)generated from per-(agent, leaf) seeds at every use (the Salimans
+  shared-seed trick, on-device), so steady-state memory is one replica per
+  agent + transients.
+
+* ``make_consensus_train_step`` — capacity fallback for archs whose
+  per-agent replica exceeds HBM (llama4-maverick): one shared θ sharded
+  over (data × model); the population is time-multiplexed with a
+  ``lax.scan``; the topology enters through per-agent degree weights
+  (DESIGN.md §7.4 records what this preserves/sacrifices).
+
+* ``make_prefill_step`` / ``make_decode_step`` — serving.
+
+Mirrored sampling (paper §5.2 mod (2)) is exact: with per-agent rewards
+R± for θ_i ± σε_i, Eq. 3 splits into
+
+  u_j = α/(Nσ²) Σ_i a_ji [ (R̃⁺_i + R̃⁻_i)(θ_i − θ_j) + (R̃⁺_i − R̃⁻_i) σ ε_i ]
+
+which reduces to standard mirrored ES for fully-connected A and equal θ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import es_utils
+from repro.core.netes import NetESConfig
+from repro.models import transformer
+
+
+# ---------------------------------------------------------------------------
+# noise regeneration (seed replay)
+# ---------------------------------------------------------------------------
+
+def _leaf_keys(agent_key: jax.Array, n_leaves: int):
+    return [jax.random.fold_in(agent_key, i) for i in range(n_leaves)]
+
+
+# Noise-stream contract (seed replay): the ε for leaf i of an agent with key
+# ``akey`` is generated from fold_in(akey, i); for leaves of rank ≥ 3 the
+# leading dim (layer-stack / expert dim) is additionally folded per slice —
+# fold_in(fold_in(akey, i), r) — and generated slice-by-slice inside a
+# lax.map/scan. This bounds the threefry scratch (u64 counters + f32
+# uniforms, ~12× the bf16 leaf bytes) to ONE slice instead of the whole
+# stacked leaf (a (48, E, D, F) MoE stack would need ~24 GiB of RNG scratch
+# per chip otherwise). perturb_params and the update loop MUST use the same
+# scheme or the regenerated noise diverges.
+
+
+def _perturb_leaf(leaf: jax.Array, key: jax.Array, sigma: float,
+                  sign: float) -> jax.Array:
+    if leaf.ndim >= 3:
+        r = leaf.shape[0]
+        keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(jnp.arange(r))
+
+        def body(args):
+            k, sl = args
+            return sl + sign * sigma * jax.random.normal(k, sl.shape,
+                                                         sl.dtype)
+
+        return jax.lax.map(body, (keys, leaf))
+    return leaf + sign * sigma * jax.random.normal(key, leaf.shape,
+                                                   leaf.dtype)
+
+
+def perturb_params(params: Any, agent_key: jax.Array, sigma: float,
+                   sign: float = 1.0) -> Any:
+    """θ + sign·σ·ε with ε regenerated per leaf from (agent_key, leaf_idx)."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = _leaf_keys(agent_key, len(leaves))
+    out = [_perturb_leaf(leaf, k, sigma, sign)
+           for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def _agent_keys(key: jax.Array, n: int) -> jax.Array:
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def _bshape(v: jax.Array, ndim: int) -> jax.Array:
+    """Reshape (N,) weights for broadcasting against an (N, ...) leaf."""
+    return v.reshape(v.shape + (1,) * (ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# replica-mode NetES train step
+# ---------------------------------------------------------------------------
+
+def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
+                            n_agents: int,
+                            agent_axis_names: Tuple[str, ...] = ("data",),
+                            mixing: str = "seed_replay",
+                            microbatch: int = 4) -> Callable:
+    """Returns step(params, adj, batch, key) -> (params', metrics).
+
+    params: pytree with leading agent axis N on every leaf.
+    adj: (N, N) adjacency. batch: leaves (N, per_agent, ...).
+    ``agent_axis_names`` feeds ``vmap(..., spmd_axis_name=...)`` so that
+    activation sharding constraints inside the per-agent forward compose
+    with the agent axis.
+
+    ``mixing`` selects the ε-mixing wire format:
+      * "gather" (baseline): ε is regenerated per-agent (sharded, no
+        communication at generation) and enters the mixing einsum like θ —
+        the all-gather moves 2× parameter bytes (θ + ε).
+      * "seed_replay": every chip regenerates every neighbor's ε locally
+        from the shared seeds inside a lax.scan — ZERO collective bytes for
+        ε (wire format = N scalar rewards, as in Salimans et al.), at the
+        cost of N× RNG FLOPs and a scan-carry buffer. See EXPERIMENTS.md
+        §Perf for the measured trade.
+    """
+    sigma, alpha = ncfg.sigma, ncfg.alpha
+    spmd = (agent_axis_names if len(agent_axis_names) > 1
+            else agent_axis_names[0])
+
+    def eval_loss(theta, abatch):
+        """Mean loss over the agent's batch, scanned in microbatches so
+        activation transients are bounded by one microbatch."""
+        b = abatch["tokens"].shape[0]
+        n_mb = max(1, min(microbatch, b))
+        if b % n_mb != 0:
+            n_mb = 1
+        mbs = jax.tree.map(
+            lambda x: x.reshape((n_mb, b // n_mb) + x.shape[1:]), abatch)
+
+        def body(acc, mb):
+            return acc + transformer.loss_fn(theta, cfg, mb), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), mbs)
+        return total / n_mb
+
+    def reward_one(theta, akey, abatch):
+        pert = perturb_params(theta, akey, sigma, +1.0)
+        r_pos = -eval_loss(pert, abatch)
+        # θ − σε without storing ε: 2θ − (θ+σε)
+        pert_neg = jax.tree.map(lambda t, p: 2.0 * t - p, theta, pert)
+        r_neg = -eval_loss(pert_neg, abatch)
+        return r_pos, r_neg
+
+    def step(params, adj, batch, key):
+        k_agents, k_beta = jax.random.split(key)
+        akeys = _agent_keys(k_agents, n_agents)
+        r_pos, r_neg = jax.vmap(reward_one, spmd_axis_name=spmd)(
+            params, akeys, batch)
+
+        shaped = es_utils.centered_rank(jnp.concatenate([r_pos, r_neg]))
+        s_pos, s_neg = shaped[:n_agents], shaped[n_agents:]
+        w_theta = adj * (s_pos + s_neg)[None, :]         # (j, i)
+        w_eps = adj * (s_pos - s_neg)[None, :]
+        wt_sum = w_theta.sum(axis=1)                     # (N,)
+        scale = alpha / (n_agents * sigma ** 2)
+
+        best = jnp.argmax(r_pos)
+        onehot_best = jax.nn.one_hot(best, n_agents, dtype=jnp.float32)
+        do_bcast = jax.random.uniform(k_beta) < ncfg.p_broadcast
+
+        onehot_dt = onehot_best
+        leaves, treedef = jax.tree.flatten(params)
+        new_leaves = []
+        for i, leaf in enumerate(leaves):
+            if mixing == "gather":
+                # ε regenerated per agent (sharded with θ — zero bytes at
+                # generation); θ and ε enter the mixing einsums, which XLA
+                # lowers to ONE all-gather over the agent axes each (the
+                # topology communication) + local matmul.
+                lkeys = jax.vmap(lambda ak, lidx=i:
+                                 jax.random.fold_in(ak, lidx))(akeys)
+                eps = jax.vmap(lambda k, sh=leaf.shape[1:], dt=leaf.dtype:
+                               jax.random.normal(k, sh, dt))(lkeys)
+                wdt = w_theta.astype(leaf.dtype)
+                wed = w_eps.astype(leaf.dtype)
+                mixed = (jnp.einsum("ji,i...->j...", wdt, leaf)
+                         + sigma * jnp.einsum("ji,i...->j...", wed, eps))
+                best_pert = jnp.einsum("i,i...->...",
+                                       onehot_dt.astype(leaf.dtype),
+                                       leaf + sigma * eps)
+            elif leaf.ndim - 1 < 3:  # seed_replay, small/flat leaves
+                # θ still mixes via the all-gather einsum (that IS the
+                # topology's parameter traffic); ε is regenerated locally
+                # per neighbor inside a scan — zero ε collective bytes.
+                wdt = w_theta.astype(leaf.dtype)
+                mixed_theta = jnp.einsum("ji,i...->j...", wdt, leaf)
+
+                def eps_body(carry, inp, sh=leaf.shape[1:], dt=leaf.dtype,
+                             lidx=i):
+                    mix_acc, best_acc = carry
+                    akey, we_col, b_i = inp
+                    eps_i = jax.random.normal(
+                        jax.random.fold_in(akey, lidx), sh, dt)
+                    web = we_col.astype(dt).reshape(
+                        (n_agents,) + (1,) * len(sh))
+                    return (mix_acc + web * eps_i[None],
+                            best_acc + b_i.astype(dt) * eps_i), None
+
+                zero = jnp.zeros(leaf.shape[1:], leaf.dtype)
+                (mixed_eps, best_eps), _ = jax.lax.scan(
+                    eps_body, (jnp.zeros_like(leaf), zero),
+                    (akeys, w_eps.T, onehot_dt))
+                mixed = mixed_theta + sigma * mixed_eps
+                best_pert = (jnp.einsum("i,i...->...",
+                                        onehot_dt.astype(leaf.dtype), leaf)
+                             + sigma * best_eps)
+            else:
+                # seed_replay, stacked leaves (N, R, rest…): outer scan over
+                # the stack dim R bounds every transient (gathered θ slice,
+                # ε accumulator, RNG scratch) to ONE (N, rest) slab — see
+                # the noise-stream contract above for the key scheme.
+                r_dim = leaf.shape[1]
+                rest = leaf.shape[2:]
+
+                def r_body(_, r_idx, lf=leaf, dt=leaf.dtype, sh=leaf.shape[2:],
+                           lidx=i):
+                    leaf_r = jax.lax.dynamic_index_in_dim(
+                        lf, r_idx, axis=1, keepdims=False)   # (N, rest)
+                    wdt = w_theta.astype(dt)
+                    mixed_theta = jnp.einsum("ji,i...->j...", wdt, leaf_r)
+
+                    def eps_body(carry, inp):
+                        mix_acc, best_acc = carry
+                        akey, we_col, b_i = inp
+                        eps_i = jax.random.normal(
+                            jax.random.fold_in(
+                                jax.random.fold_in(akey, lidx), r_idx),
+                            sh, dt)
+                        web = we_col.astype(dt).reshape(
+                            (n_agents,) + (1,) * len(sh))
+                        return (mix_acc + web * eps_i[None],
+                                best_acc + b_i.astype(dt) * eps_i), None
+
+                    zero = jnp.zeros(sh, dt)
+                    (mixed_eps, best_eps), _ = jax.lax.scan(
+                        eps_body, (jnp.zeros_like(leaf_r), zero),
+                        (akeys, w_eps.T, onehot_dt))
+                    mixed_r = mixed_theta + sigma * mixed_eps
+                    best_r = (jnp.einsum("i,i...->...",
+                                         onehot_dt.astype(dt), leaf_r)
+                              + sigma * best_eps)
+                    return None, (mixed_r, best_r)
+
+                _, (mixed_s, best_s) = jax.lax.scan(
+                    r_body, None, jnp.arange(r_dim))
+                mixed = jnp.swapaxes(mixed_s, 0, 1)      # (N, R, rest)
+                best_pert = best_s                       # (R, rest)
+                del rest
+
+            update = scale * (mixed
+                              - _bshape(wt_sum.astype(leaf.dtype), leaf.ndim)
+                              * leaf)
+            update = update - ncfg.weight_decay * leaf
+            new = leaf + update
+            # broadcast event: everyone adopts the best agent's perturbation
+            new = jnp.where(do_bcast,
+                            jnp.broadcast_to(best_pert, new.shape), new)
+            new_leaves.append(new)
+        new_params = jax.tree.unflatten(treedef, new_leaves)
+
+        metrics = {
+            "reward_mean": r_pos.mean(),
+            "reward_max": r_pos.max(),
+            "loss_mean": -r_pos.mean(),
+            "broadcast": do_bcast.astype(jnp.float32),
+        }
+        return new_params, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# consensus-mode NetES train step (time-multiplexed population)
+# ---------------------------------------------------------------------------
+
+def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
+                              n_pop: int) -> Callable:
+    """Returns step(params, adj, batch, key) -> (params', metrics).
+
+    params: ONE shared tree (no agent axis). batch leaves:
+    (n_pop, microbatch, ...) — member i is evaluated on microbatch i.
+    """
+    sigma, alpha = ncfg.sigma, ncfg.alpha
+
+    def step(params, adj, batch, key):
+        k_agents, k_beta = jax.random.split(key)
+        akeys = _agent_keys(k_agents, n_pop)
+
+        def eval_member(_, inp):
+            akey, mb = inp
+            pert = perturb_params(params, akey, sigma, +1.0)
+            r_pos = -transformer.loss_fn(pert, cfg, mb)
+            pert_neg = jax.tree.map(lambda t, p: 2.0 * t - p, params, pert)
+            r_neg = -transformer.loss_fn(pert_neg, cfg, mb)
+            return None, (r_pos, r_neg)
+
+        _, (r_pos, r_neg) = jax.lax.scan(eval_member, None, (akeys, batch))
+
+        shaped = es_utils.centered_rank(jnp.concatenate([r_pos, r_neg]))
+        w_eps = shaped[:n_pop] - shaped[n_pop:]          # (P,)
+        degree = adj.sum(axis=0) / n_pop                 # topology weighting
+        coeff = w_eps * degree                           # (P,)
+        best = jnp.argmax(r_pos)
+        onehot_best = jax.nn.one_hot(best, n_pop, dtype=jnp.float32)
+        do_bcast = jax.random.uniform(k_beta) < ncfg.p_broadcast
+        scale = alpha / (n_pop * sigma)
+
+        def accum(upd, inp):
+            akey, c_i = inp
+            pert = perturb_params(params, akey, sigma, +1.0)
+            new_upd = jax.tree.map(
+                lambda u, t, p: u + c_i.astype(u.dtype) * (p - t) / sigma,
+                upd, params, pert)
+            return new_upd, None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        upd, _ = jax.lax.scan(accum, zeros, (akeys, coeff))
+
+        new_params = jax.tree.map(
+            lambda t, u: t + scale * u - ncfg.weight_decay * t, params, upd)
+        # broadcast/exploit: jump to the best member's perturbation —
+        # regenerated from the best member's key (seed replay) instead of
+        # carrying a second full-tree accumulator through the scan.
+        best_key = jax.tree.map(lambda a: a[best], akeys)
+        best_pert = perturb_params(params, best_key, sigma, +1.0)
+        new_params = jax.tree.map(
+            lambda n, bp: jnp.where(do_bcast, bp, n),
+            new_params, best_pert)
+
+        metrics = {
+            "reward_mean": r_pos.mean(),
+            "reward_max": r_pos.max(),
+            "loss_mean": -r_pos.mean(),
+            "broadcast": do_bcast.astype(jnp.float32),
+        }
+        return new_params, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill(params, batch):
+        logits = transformer.forward(params, cfg, batch)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode(params, token, cache, pos):
+        return transformer.decode_step(params, cfg, token, cache, pos)
+
+    return decode

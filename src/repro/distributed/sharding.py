@@ -1,0 +1,329 @@
+"""Sharding rules: map parameter/batch/cache pytrees to PartitionSpecs.
+
+Modes
+-----
+``replica``   NetES train: per-agent parameter replicas. Every param leaf
+              gains a leading agent axis sharded over the agent mesh axes
+              (("pod","data") multi-pod, ("data",) single-pod); feature dims
+              follow the per-tensor rules below.
+``consensus`` NetES train for archs whose per-agent replica exceeds HBM
+              (llama4-maverick): one shared parameter tree sharded over
+              data+model jointly; the population is time-multiplexed
+              (DESIGN.md §2, §7.4).
+``serve``     prefill/decode: one parameter tree; batch over data axes,
+              tensor-parallel over "model"; MoE experts expert-parallel
+              over "data".
+
+Per-tensor rules (feature dims)
+-------------------------------
+* embeddings / lm_head: vocab dim over "model" (keeps logits sharded).
+* FFN: d_ff over "model" (all assigned archs have d_ff % 16 == 0).
+* attention projections: REPLICATED over "model" — GQA head counts in the
+  assigned pool (6, 8, 10, 32, 40 q-heads; 2–16 kv-heads) mostly do not
+  divide the 16-wide model axis, so the baseline uses sequence/context
+  parallelism for attention (residual stream S-sharded; K/V all-gathered
+  per layer) instead of head sharding. This is a deliberate,
+  roofline-visible baseline choice; hillclimbs attack it (EXPERIMENTS.md).
+* mamba: d_inner over "model" (16384 % 16 == 0).
+* rwkv: square projections sharded on the output (then input for wo) dim.
+* MoE experts: expert dim over "model" in replica/consensus mode, over
+  "data" (expert-parallel) in serve mode, with per-expert d_ff over
+  "model" in serve mode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path
+
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+
+
+def agent_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return agent_axes(mesh)
+
+
+def n_agents(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in agent_axes(mesh)]))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _leaf_spec(cfg: ModelConfig, path: str, leaf, mode: str) -> P:
+    """Feature-dim PartitionSpec for one parameter leaf (no agent axis)."""
+    nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    m = MODEL_AXIS
+
+    def pad(*dims):
+        return P(*(tuple(dims) + (None,) * (nd - len(dims))))
+
+    name = path.rsplit("/", 1)[-1]
+
+    # ---- embeddings ----
+    if name in ("embed",):
+        return P(m, None)
+    if name == "lm_head":
+        return P(None, m)
+    if name in ("pos_embed", "enc_pos_embed"):
+        return P(None, None)
+
+    # ---- MoE ----
+    if "/moe/" in path or path.endswith("moe"):
+        if name == "router":
+            return P(None, None)
+        # serve/consensus: ONE copy of the expert bank ⇒ expert-parallel
+        # over "data" + per-expert d_ff over "model" (maverick: 800 GB bf16
+        # must spread over all 256 chips). replica: each agent already owns
+        # a replica ⇒ experts over "model" only.
+        ep = mode in ("serve", "consensus")
+        expert_axis = "data" if ep else m
+        if name in ("w_gate", "w_up"):                  # (E, D, F)
+            return P(expert_axis, None, m if ep else None)
+        if name == "w_down":                            # (E, F, D)
+            return P(expert_axis, m if ep else None, None)
+
+    # ---- mamba ----
+    if "/mamba/" in path:
+        if name in ("in_x", "in_z"):
+            return P(None, m)
+        if name in ("conv_w",):
+            return P(None, m)
+        if name in ("conv_b", "D", "dt_bias"):
+            return P(m)
+        if name == "x_proj":
+            return P(m, None)
+        if name == "dt_proj":
+            return P(None, m)
+        if name == "A_log":
+            return P(m, None)
+        if name == "out_proj":
+            return P(m, None)
+
+    # ---- rwkv time-mix ----
+    if "/rwkv/" in path:
+        if name in ("wr", "wk", "wv", "wg"):
+            return P(None, m)
+        if name == "wo":
+            return P(m, None)
+        return pad()                                     # loras, mixes, norms
+
+    # ---- rwkv channel mix (inside ffn of rwkv archs) ----
+    if cfg.rwkv and "/ffn/" in path:
+        if name == "wk":                                 # (D, F)
+            return P(None, m)
+        if name == "wv":                                 # (F, D)
+            return P(m, None)
+        if name == "wr":                                 # (D, D)
+            return P(None, None)
+        return pad()
+
+    # ---- dense FFN ----
+    if "/ffn/" in path:
+        if name in ("w_gate", "w_up", "w_in"):
+            return P(None, m)
+        if name in ("w_down", "w_out"):
+            return P(m, None)
+        if name == "b_in":
+            return P(m)
+        return pad()
+
+    # ---- attention ----
+    # Head counts in the assigned pool (6/8/10/32/40 q-heads, 2–16 kv)
+    # mostly don't divide the 16-wide model axis, so heads are NOT sharded.
+    # In train modes the projections shard on the d_model INPUT dim instead
+    # (P over "model" on D): XLA re-gathers the (small) weight per layer —
+    # a deliberate memory↔bandwidth trade that keeps the per-chip noise/
+    # param footprint 1/16th (the RNG perturbation buffers on replicated
+    # attention leaves dominated HBM otherwise). Serve keeps them
+    # replicated: decode would pay a per-token weight gather.
+    # §Perf iteration 1 (EXPERIMENTS.md): replica mode now REPLICATES
+    # attention weights — the D-sharding forced XLA to all-gather either x
+    # or the weights per layer per microbatch (~174 GB/step on nemo train);
+    # the original memory motivation (RNG scratch on stacked attn leaves)
+    # is gone since _perturb_leaf slices the layer-stack dim. Consensus
+    # keeps D-sharding: its per-chip replicated-attn footprint (maverick:
+    # 6 GB × {θ, scan accumulator}) doesn't fit otherwise.
+    if "/attn/" in path or "/cross/" in path:
+        if mode == "consensus":
+            if name in ("wq", "wk", "wv"):              # (D, H, hd)
+                return P(m, None, None)
+            if name == "wo":                            # (H, hd, D)
+                return P(None, m, None)
+        return pad()
+
+    return pad()                                         # norms, scalars
+
+
+def param_pspecs(cfg: ModelConfig, params_tree: Any, mode: str,
+                 mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (abstract or concrete)."""
+    stacked = mode == "replica"
+    ax = agent_axes(mesh)
+
+    class _Shim:
+        def __init__(self, ndim):
+            self.ndim = ndim
+
+    def fn(path, leaf):
+        nd = len(leaf.shape)
+        p = _path_str(path)
+        # scanned layer stacks carry a leading n_rep dim (unsharded);
+        # replica mode prepends the agent axis in front of everything.
+        n_scan = 1 if "layers_scan" in p else 0
+        n_stack = 1 if stacked else 0
+        spec = _leaf_spec(cfg, p, _Shim(nd - n_scan - n_stack), mode)
+        prefix = ((ax,) if stacked else ()) + (None,) * n_scan
+        return guard_divisibility(P(*prefix, *tuple(spec)), leaf.shape, mesh)
+
+    return tree_map_with_path(fn, params_tree)
+
+
+def guard_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (e.g. whisper's
+    51865 vocab over a 16-wide model axis ⇒ replicate that dim)."""
+    parts = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
+    out = []
+    for d, axp in zip(shape, parts):
+        if axp is None:
+            out.append(None)
+            continue
+        axes = axp if isinstance(axp, tuple) else (axp,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(axp if d % size == 0 else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def train_batch_pspecs(cfg: ModelConfig, batch_tree: Any, mode: str,
+                       mesh: Mesh) -> Any:
+    """Train batches are shaped (N_agents, per_agent_batch, ...) in replica
+    mode and (N_pop, microbatch, ...) in consensus mode."""
+    ax = agent_axes(mesh)
+
+    def fn(path, leaf):
+        nd = len(leaf.shape)
+        if mode == "replica":
+            lead: Tuple = (ax,)
+        else:                       # consensus: population axis is scanned,
+            lead = (None,)          # microbatch over the data axes
+            return P(None, ax, *(None,) * (nd - 2))
+        return P(*(lead + (None,) * (nd - 1)))
+
+    return tree_map_with_path(fn, batch_tree)
+
+
+def serve_batch_pspecs(cfg: ModelConfig, batch_tree: Any, mesh: Mesh,
+                       batch_size: int) -> Any:
+    ax = data_axes(mesh)
+    shard_batch = batch_size % int(np.prod([mesh.shape[a] for a in ax])) == 0
+
+    def fn(path, leaf):
+        nd = len(leaf.shape)
+        if shard_batch:
+            return P(ax, *(None,) * (nd - 1))
+        return P(*(None,) * nd)
+
+    return tree_map_with_path(fn, batch_tree)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree: Any, mesh: Mesh,
+                 batch_size: int) -> Any:
+    """Decode-cache specs. Batch over data axes when divisible; the cache
+    sequence dim over "model" (B>1) or over all axes (B==1, long-context)."""
+    ax = data_axes(mesh)
+    ndata = int(np.prod([mesh.shape[a] for a in ax]))
+    shard_batch = batch_size % ndata == 0
+    seq_axes: Any = MODEL_AXIS if shard_batch else tuple(ax) + (MODEL_AXIS,)
+    batch_spec = ax if shard_batch else None
+
+    def fn(path, leaf):
+        p = _path_str(path)
+        name = p.rsplit("/", 1)[-1]
+        nd = len(leaf.shape)
+        lead = (None,) if "scan/" in p else ()   # stacked n_rep dim
+        if name in ("k", "v"):             # (B, L, kv, hd)
+            return P(*lead, batch_spec, seq_axes, None, None)
+        if name == "h":                    # mamba state (B, di, ds)
+            return P(*lead, batch_spec, MODEL_AXIS, None)
+        if name == "conv":                 # (B, K−1, di)
+            return P(*lead, batch_spec, None, MODEL_AXIS)
+        if name == "s":                    # rwkv state (B, H, n, n)
+            return P(*lead, batch_spec, MODEL_AXIS, None, None)
+        if name in ("x_prev", "channel_x_prev"):
+            return P(*lead, batch_spec, None, None)
+        if name == "enc_out":              # (B, T, D)
+            return P(batch_spec, None, None)
+        return P(*lead + (batch_spec,) + (None,) * (nd - 1 - len(lead)))
+
+    def guarded(path, leaf):
+        return guard_divisibility(fn(path, leaf), leaf.shape, mesh)
+
+    return tree_map_with_path(guarded, cache_tree)
+
+
+def activation_roles(cfg: ModelConfig, mode: str, mesh: Mesh,
+                     kind: str) -> Dict[str, P]:
+    """Role specs for ``maybe_constrain``.
+
+    Train/prefill on attention-only archs: the residual stream is
+    SEQUENCE-sharded over "model" (context parallelism — works for any GQA
+    head count, unlike head sharding; K/V are all-gathered per layer via the
+    "kv_full" role). SSM/hybrid archs keep the sequence whole per chip (the
+    recurrent scan is sequential in S) and shard SSM channels over "model"
+    via the parameter rules instead. Whisper's 1500-frame encoder sequence
+    does not divide 16 ⇒ replicated as well.
+
+    In replica mode the constraints are applied INSIDE a
+    ``vmap(..., spmd_axis_name=agent_axes)`` — specs here describe the
+    un-vmapped ranks: (b, S, D) residual, (b, S, Hkv, hd) K/V.
+    """
+    if kind == "decode":
+        return {}
+    has_ssm = any(ls.mixer in ("mamba", "rwkv") for ls in cfg.layer_specs())
+    seq_shardable = (not has_ssm and not cfg.is_encoder_decoder)
+    if mode in ("replica",):
+        lead: Tuple = (None,)            # (b, S, D); agents via spmd_axis_name
+    elif mode == "consensus":
+        lead = (agent_axes(mesh),)       # microbatch over the data axes
+    else:
+        bsz_axes = data_axes(mesh)
+        lead = (bsz_axes,)
+    roles: Dict[str, P] = {}
+    if seq_shardable:
+        roles["residual"] = P(*lead, MODEL_AXIS, None)
+        roles["kv_full"] = P(*lead, None, None, None)
+        # §Perf iteration 1: Megatron-style sequence parallelism for the
+        # dense FFN — all-gather x at FFN entry (S-shard → full), compute
+        # with F-sharded weights locally, reduce-scatter the output back to
+        # S-sharded. Weights never move: per layer ~2 activation transfers
+        # instead of 3 weight gathers × microbatches. NOT in consensus mode:
+        # there the per-member scan already amortizes differently and the
+        # full-S partials get all-reduced per member (measured 315→2454 GB
+        # AR regression on maverick — §Perf log).
+        if mode != "consensus":
+            roles["ffn_input"] = P(*lead, None, None)
+    else:
+        roles["residual"] = P(*lead, None, None)
+    return roles

@@ -1,0 +1,22 @@
+"""Pure-JAX environments for NetES evaluation.
+
+MuJoCo/Roboschool are unavailable offline; these JAX control tasks +
+synthetic landscapes are the reduced-scale stand-ins (DESIGN.md §7.1).
+"""
+from .landscapes import LANDSCAPES, make_landscape_reward_fn
+from .pendulum import Pendulum
+from .cartpole import CartPoleSwingUp
+from .acrobot import Acrobot
+from .policy import MLPPolicy
+from .rollout import make_env_reward_fn
+
+ENVS = {
+    "pendulum": Pendulum,
+    "cartpole_swingup": CartPoleSwingUp,
+    "acrobot": Acrobot,
+}
+
+__all__ = [
+    "LANDSCAPES", "make_landscape_reward_fn", "Pendulum", "CartPoleSwingUp",
+    "Acrobot", "MLPPolicy", "make_env_reward_fn", "ENVS",
+]

@@ -1,0 +1,72 @@
+"""Acrobot swing-up (continuous-torque variant), pure JAX."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Acrobot:
+    dt: float = 0.2
+    l1: float = 1.0
+    l2: float = 1.0
+    m1: float = 1.0
+    m2: float = 1.0
+    lc1: float = 0.5
+    lc2: float = 0.5
+    i1: float = 1.0
+    i2: float = 1.0
+    g: float = 9.8
+    max_vel1: float = 4 * jnp.pi
+    max_vel2: float = 9 * jnp.pi
+    torque_mag: float = 1.0
+    episode_len: int = 200
+
+    obs_dim: int = 6
+    act_dim: int = 1
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        return 0.1 * jax.random.normal(key, (4,))
+
+    def observe(self, s: jax.Array) -> jax.Array:
+        t1, t2, d1, d2 = s
+        return jnp.array([jnp.cos(t1), jnp.sin(t1), jnp.cos(t2), jnp.sin(t2),
+                          d1 / self.max_vel1, d2 / self.max_vel2])
+
+    def _dsdt(self, s: jax.Array, tau) -> jax.Array:
+        t1, t2, d1, d2 = s
+        m1, m2, l1, lc1, lc2, i1, i2, g = (self.m1, self.m2, self.l1,
+                                           self.lc1, self.lc2, self.i1,
+                                           self.i2, self.g)
+        d_1 = (m1 * lc1 ** 2 + m2 * (l1 ** 2 + lc2 ** 2
+               + 2 * l1 * lc2 * jnp.cos(t2)) + i1 + i2)
+        d_2 = m2 * (lc2 ** 2 + l1 * lc2 * jnp.cos(t2)) + i2
+        phi2 = m2 * lc2 * g * jnp.cos(t1 + t2 - jnp.pi / 2.0)
+        phi1 = (-m2 * l1 * lc2 * d2 ** 2 * jnp.sin(t2)
+                - 2 * m2 * l1 * lc2 * d2 * d1 * jnp.sin(t2)
+                + (m1 * lc1 + m2 * l1) * g * jnp.cos(t1 - jnp.pi / 2.0) + phi2)
+        dd2 = ((tau + d_2 / d_1 * phi1 - m2 * l1 * lc2 * d1 ** 2
+                * jnp.sin(t2) - phi2)
+               / (m2 * lc2 ** 2 + i2 - d_2 ** 2 / d_1))
+        dd1 = -(d_2 * dd2 + phi1) / d_1
+        return jnp.array([d1, d2, dd1, dd2])
+
+    def step(self, state: jax.Array, action: jax.Array, key: jax.Array):
+        tau = jnp.clip(action[0], -1.0, 1.0) * self.torque_mag
+        # RK4 integration
+        s = state
+        k1 = self._dsdt(s, tau)
+        k2 = self._dsdt(s + 0.5 * self.dt * k1, tau)
+        k3 = self._dsdt(s + 0.5 * self.dt * k2, tau)
+        k4 = self._dsdt(s + self.dt * k3, tau)
+        s = s + self.dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+        t1 = ((s[0] + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+        t2 = ((s[1] + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+        d1 = jnp.clip(s[2], -self.max_vel1, self.max_vel1)
+        d2 = jnp.clip(s[3], -self.max_vel2, self.max_vel2)
+        s = jnp.array([t1, t2, d1, d2])
+        # height of tip: reward swing-up progress
+        height = -jnp.cos(t1) - jnp.cos(t1 + t2)
+        return s, height

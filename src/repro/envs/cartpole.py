@@ -1,0 +1,52 @@
+"""Cart-pole swing-up, pure JAX — a harder walker-style continuous task."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CartPoleSwingUp:
+    gravity: float = 9.8
+    m_cart: float = 0.5
+    m_pole: float = 0.5
+    pole_len: float = 0.6
+    force_mag: float = 10.0
+    dt: float = 0.01
+    x_limit: float = 2.4
+    episode_len: int = 500
+
+    obs_dim: int = 5
+    act_dim: int = 1
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        # state: x, x_dot, theta (pi = hanging down), theta_dot
+        noise = 0.05 * jax.random.normal(key, (4,))
+        return jnp.array([0.0, 0.0, jnp.pi, 0.0]) + noise
+
+    def observe(self, state: jax.Array) -> jax.Array:
+        x, x_dot, th, th_dot = state
+        return jnp.array([x / self.x_limit, x_dot, jnp.cos(th), jnp.sin(th), th_dot])
+
+    def step(self, state: jax.Array, action: jax.Array, key: jax.Array):
+        x, x_dot, th, th_dot = state
+        force = jnp.clip(action[0], -1.0, 1.0) * self.force_mag
+        mt = self.m_cart + self.m_pole
+        ml = self.m_pole * self.pole_len
+        sin_t, cos_t = jnp.sin(th), jnp.cos(th)
+        temp = (force + ml * th_dot ** 2 * sin_t) / mt
+        th_acc = (self.gravity * sin_t - cos_t * temp) / (
+            self.pole_len * (4.0 / 3.0 - self.m_pole * cos_t ** 2 / mt))
+        x_acc = temp - ml * th_acc * cos_t / mt
+        x = x + self.dt * x_dot
+        x_dot = x_dot + self.dt * x_acc
+        th = th + self.dt * th_dot
+        th_dot = th_dot + self.dt * th_acc
+        # reward: keep pole up (cos θ = 1) and cart centered
+        upright = jnp.cos(th)
+        centered = jnp.exp(-x ** 2)
+        out_of_bounds = (jnp.abs(x) > self.x_limit).astype(jnp.float32)
+        reward = upright * centered - 5.0 * out_of_bounds
+        return jnp.array([x, x_dot, th, th_dot]), reward

@@ -1,0 +1,41 @@
+"""Pendulum swing-up, pure JAX (classic gym Pendulum-v1 dynamics)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Pendulum:
+    max_speed: float = 8.0
+    max_torque: float = 2.0
+    dt: float = 0.05
+    g: float = 10.0
+    m: float = 1.0
+    length: float = 1.0
+    episode_len: int = 200
+
+    obs_dim: int = 3
+    act_dim: int = 1
+
+    def reset(self, key: jax.Array) -> jax.Array:
+        hi = jnp.array([jnp.pi, 1.0])
+        th, thdot = jax.random.uniform(key, (2,), minval=-hi, maxval=hi)
+        return jnp.array([th, thdot])
+
+    def observe(self, state: jax.Array) -> jax.Array:
+        th, thdot = state[0], state[1]
+        return jnp.array([jnp.cos(th), jnp.sin(th), thdot / self.max_speed])
+
+    def step(self, state: jax.Array, action: jax.Array, key: jax.Array):
+        th, thdot = state[0], state[1]
+        u = jnp.clip(action[0], -1.0, 1.0) * self.max_torque
+        ang = ((th + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+        cost = ang ** 2 + 0.1 * thdot ** 2 + 0.001 * u ** 2
+        newthdot = thdot + (3 * self.g / (2 * self.length) * jnp.sin(th)
+                            + 3.0 / (self.m * self.length ** 2) * u) * self.dt
+        newthdot = jnp.clip(newthdot, -self.max_speed, self.max_speed)
+        newth = th + newthdot * self.dt
+        return jnp.array([newth, newthdot]), -cost

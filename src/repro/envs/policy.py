@@ -1,0 +1,68 @@
+"""The paper's policy network: MLP with two 64-unit tanh hidden layers
+(§5.2, matching Salimans et al.), operating on a *flat parameter vector* so
+ES can perturb it directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPPolicy:
+    obs_dim: int
+    act_dim: int
+    hidden: Tuple[int, ...] = (64, 64)
+    discrete: bool = False
+
+    @property
+    def layer_shapes(self):
+        dims = (self.obs_dim,) + self.hidden + (self.act_dim,)
+        shapes = []
+        for din, dout in zip(dims[:-1], dims[1:]):
+            shapes.append((din, dout))
+            shapes.append((dout,))
+        return shapes
+
+    @property
+    def num_params(self) -> int:
+        import math
+        return sum(math.prod(s) for s in self.layer_shapes)
+
+    def init(self, key: jax.Array) -> jax.Array:
+        """Glorot-ish init, returned flat."""
+        parts = []
+        for shape in self.layer_shapes:
+            key, sub = jax.random.split(key)
+            if len(shape) == 2:
+                scale = jnp.sqrt(2.0 / (shape[0] + shape[1]))
+                parts.append(scale * jax.random.normal(sub, shape).reshape(-1))
+            else:
+                parts.append(jnp.zeros(shape))
+        return jnp.concatenate(parts)
+
+    def unflatten(self, theta: jax.Array):
+        import math
+        params = []
+        offset = 0
+        for shape in self.layer_shapes:
+            size = math.prod(shape)
+            params.append(theta[offset:offset + size].reshape(shape))
+            offset += size
+        return params
+
+    def apply(self, theta: jax.Array, obs: jax.Array) -> jax.Array:
+        params = self.unflatten(theta)
+        h = obs
+        n_layers = len(params) // 2
+        for i in range(n_layers):
+            w, b = params[2 * i], params[2 * i + 1]
+            h = h @ w + b
+            if i < n_layers - 1:
+                h = jnp.tanh(h)
+        if self.discrete:
+            return h  # logits; env takes argmax
+        return jnp.tanh(h)  # bounded continuous action

@@ -1,0 +1,61 @@
+"""Episode rollouts as lax.scan, and reward_fn factories for NetES.
+
+The paper evaluates each perturbed parameter set with one full episode per
+iteration (§5.2 modification (1)). ``make_env_reward_fn`` returns a
+``reward_fn(params (M, D), key) -> (M,)`` that vmaps episode returns over
+the population — the exact interface ``core.netes`` consumes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .policy import MLPPolicy
+
+
+def episode_return(env, policy: MLPPolicy, theta: jax.Array,
+                   key: jax.Array) -> jax.Array:
+    k_reset, k_steps = jax.random.split(key)
+    state0 = env.reset(k_reset)
+
+    def body(carry, k):
+        state, total = carry
+        obs = env.observe(state)
+        action = policy.apply(theta, obs)
+        state, reward = env.step(state, action, k)
+        return (state, total + reward), None
+
+    keys = jax.random.split(k_steps, env.episode_len)
+    (final_state, total), _ = jax.lax.scan(body, (state0, 0.0), keys)
+    del final_state
+    return total
+
+
+def make_env_reward_fn(env, policy: MLPPolicy,
+                       episodes_per_eval: int = 1) -> Callable:
+    """reward_fn(params (M, D), key) -> (M,) mean episode return."""
+
+    def single(theta: jax.Array, key: jax.Array) -> jax.Array:
+        keys = jax.random.split(key, episodes_per_eval)
+        rets = jax.vmap(partial(episode_return, env, policy, theta))(keys)
+        return rets.mean()
+
+    def reward_fn(params: jax.Array, key: jax.Array) -> jax.Array:
+        m = params.shape[0]
+        keys = jax.random.split(key, m)
+        return jax.vmap(single)(params, keys)
+
+    return reward_fn
+
+
+def evaluate_best(env, policy: MLPPolicy, theta: jax.Array, key: jax.Array,
+                  episodes: int = 32) -> jax.Array:
+    """Paper's evaluation metric: run best params w/o noise for many
+    episodes, return mean total reward (§5.2; 1000 episodes in the paper,
+    reduced here)."""
+    keys = jax.random.split(key, episodes)
+    rets = jax.vmap(partial(episode_return, env, policy, theta))(keys)
+    return rets.mean()

@@ -1,0 +1,67 @@
+"""Jit'd dispatch wrappers: kernel when enabled, jnp oracle otherwise.
+
+The dry-run lowers the pure-jnp paths (Pallas TPU lowering is unavailable
+on the CPU container; interpret mode is correctness-only), so model code
+calls these wrappers with ``use_kernel=False`` by default — flipping the
+flag (or REPRO_USE_KERNELS=1) routes the hot loops through the Pallas
+kernels on real TPU.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import flash_attention as _fa
+from . import mamba_scan as _ms
+from . import moe_router as _mr
+from . import netes_mixing as _nm
+from . import ref
+from . import rwkv6_wkv as _rw
+
+_USE_KERNELS = os.environ.get("REPRO_USE_KERNELS", "0") == "1"
+_INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") == "1"
+
+
+def use_kernels() -> bool:
+    return _USE_KERNELS
+
+
+def netes_mixing(adj, w_theta, w_eps, theta, eps, *, sigma,
+                 use_kernel=None):
+    if use_kernel if use_kernel is not None else _USE_KERNELS:
+        return _nm.netes_mixing(adj, w_theta, w_eps, theta, eps,
+                                sigma=sigma, interpret=_INTERPRET)
+    return ref.netes_mixing_ref(adj, w_theta, w_eps, theta, eps, sigma=sigma)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, chunk=0, scale=None,
+                    use_kernel=None):
+    if use_kernel if use_kernel is not None else _USE_KERNELS:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   chunk=chunk, scale=scale,
+                                   interpret=_INTERPRET)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   chunk=chunk, scale=scale)
+
+
+def mamba_scan(decay, drive, *, use_kernel=None):
+    if use_kernel if use_kernel is not None else _USE_KERNELS:
+        return _ms.mamba_scan(decay, drive, interpret=_INTERPRET)
+    return ref.mamba_scan_ref(decay, drive)
+
+
+def rwkv6_wkv(r, k, v, w, u, *, use_kernel=None):
+    if use_kernel if use_kernel is not None else _USE_KERNELS:
+        return _rw.rwkv6_wkv(r, k, v, w, u, interpret=_INTERPRET)
+    return ref.rwkv6_wkv_ref(r, k, v, w, u)
+
+
+def moe_topk(logits, k, *, use_kernel=None):
+    if use_kernel if use_kernel is not None else _USE_KERNELS:
+        return _mr.moe_topk(logits, k, interpret=_INTERPRET)
+    return ref.moe_topk_ref(logits, k)
+
+
+__all__ = ["netes_mixing", "flash_attention", "mamba_scan", "rwkv6_wkv",
+           "moe_topk", "use_kernels"]

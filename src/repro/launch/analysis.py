@@ -1,0 +1,136 @@
+"""Compiled-artifact analysis: memory, FLOPs, and collective-byte accounting
+for the roofline report (no real hardware — this is dry-run profiling).
+
+Conventions (documented here once, used everywhere):
+
+* ``compiled.as_text()`` is the post-SPMD-partitioning module ⇒ shapes are
+  PER-DEVICE. We therefore report per-device quantities and the roofline
+  terms divide by single-chip peaks (equivalent to the brief's global/
+  (chips × peak) form).
+* collective bytes = Σ over collective ops of the per-device result bytes,
+  ×2 for all-reduce (reduce-scatter + all-gather equivalent). This is the
+  volume crossing the chip's ICI links under a bandwidth-optimal ring.
+* TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI
+  (we assume 1 link usable per collective direction — conservative).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over all array shapes in an HLO type string (handles
+    tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes by op kind, from a partitioned module."""
+    stats = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # "%x = TYPE opname(...)" — match result type then op name
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                     r"([a-z0-9\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        # exclude -start/-done duplicates: count -start, skip -done
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        mult = 2.0 if base == "all-reduce" else 1.0
+        stats[base] += mult * nbytes
+        counts[base] += 1
+    out: Dict[str, float] = {f"{k}_bytes": v for k, v in stats.items()}
+    out.update({f"{k}_count": float(v) for k, v in counts.items()})
+    out["collective_bytes"] = sum(stats.values())
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float,
+                   collective_bytes: float) -> Dict[str, float]:
+    """All inputs per-device. Returns the three terms in seconds + the
+    dominant one."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = collective_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant.replace("_s", "")
+    terms["step_time_lower_bound_s"] = max(t_compute, t_memory, t_collective)
+    return terms
+
+
+def model_flops(cfg, shape: Dict, kind: str) -> float:
+    """MODEL_FLOPS = 6·N_active·D tokens (forward-only ES step ⇒ 2·N·D per
+    forward; we report the conventional 6·N·D training equivalent AND the
+    forward-only 2·N·D — the ratio table uses forward-only × forwards/step).
+    """
+    n_active = cfg.active_params_per_token()
+    tokens = shape["seq_len"] * shape["global_batch"]
+    if kind == "train":
+        # NetES: 2 forwards (antithetic) per step, forward-only
+        return 2 * 2.0 * n_active * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape["global_batch"]
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+            "peak_bytes": float(
+                getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:                                # pragma: no cover
+        return {"error": str(e)}
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:                                # pragma: no cover
+        return {"error": str(e)}

@@ -1,0 +1,219 @@
+"""Trip-count-aware HLO cost extraction.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports FLOPs/bytes for scan-over-layers modules by ~n_layers×.
+This parser walks the post-partitioning HLO text, attributes per-
+computation costs (dot FLOPs, collective bytes, touched bytes), then
+propagates multipliers through the call graph using the
+``known_trip_count`` backend configs XLA attaches to while ops.
+
+Costs extracted per computation:
+  * dot_flops     — exact: 2 · prod(result dims) · prod(contracting dims)
+                    (matmuls dominate; elementwise FLOPs are ignored, same
+                    order as cost_analysis' treatment of fused elementwise)
+  * coll_bytes    — per collective kind, result bytes (×2 for all-reduce)
+  * touch_bytes   — Σ result bytes over all ops ×2 (read+write HBM proxy;
+                    an upper-ish bound used for the memory roofline term,
+                    cross-checked against cost_analysis' bytes-accessed)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_DEF_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z0-9\-]+)\(")
+_REF_RE = re.compile(r"(?:to_apply|calls|body|condition)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    total_b = 0
+    total_n = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_n += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_n, total_b
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+def parse_module(txt: str) -> Dict:
+    """One pass over the HLO text. Returns per-computation costs, the call
+    graph with trip multipliers, and the entry computation name."""
+    comps: Dict[str, Dict] = {}
+    edges: Dict[str, list] = defaultdict(list)   # caller -> [(callee, mult)]
+    shapes: Dict[str, list] = {}                 # op name -> result dims
+    entry = None
+    cur = None
+    for raw in txt.splitlines():
+        mdef = _COMP_DEF_RE.match(raw)
+        if mdef and raw.rstrip().endswith("{"):
+            cur = mdef.group(2)
+            comps[cur] = {"dot_flops": 0.0, "touch_bytes": 0.0,
+                          "dot_bytes": 0.0,
+                          **{f"{k}_bytes": 0.0 for k in _COLLECTIVES},
+                          **{f"{k}_count": 0 for k in _COLLECTIVES}}
+            if mdef.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        mop = _OP_RE.match(raw)
+        if not mop:
+            continue
+        opid, result_type, opname = mop.group(1), mop.group(2), mop.group(3)
+        _, rbytes = _shape_elems_bytes(result_type)
+        comps[cur]["touch_bytes"] += 2.0 * rbytes
+        dims = _first_shape_dims(result_type)
+        if dims is not None:
+            shapes[opid] = (dims, rbytes)
+
+        base = opname.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not opname.endswith("-done"):
+            cbytes = rbytes
+            if opname.endswith("-start"):
+                # async-start results are (input, output) tuples: count the
+                # output shape only
+                all_shapes = _SHAPE_RE.findall(result_type)
+                if len(all_shapes) > 1:
+                    dt, dims = all_shapes[-1]
+                    n = 1
+                    for d in (dims.split(",") if dims else []):
+                        n *= int(d)
+                    cbytes = n * _DTYPE_BYTES.get(dt, 0)
+            mult = 2.0 if base == "all-reduce" else 1.0
+            comps[cur][f"{base}_bytes"] += mult * cbytes
+            comps[cur][f"{base}_count"] += 1
+
+        if opname == "dot":
+            out_dims = _first_shape_dims(result_type)
+            out_elems = 1
+            for d in out_dims or []:
+                out_elems *= d
+            # contracting sizes: resolve the lhs operand's shape by name
+            # (post-optimization HLO prints operands untyped) — SSA order
+            # guarantees the operand line was seen already.
+            mc = _CONTRACT_RE.search(raw)
+            contract = 1
+            operand_bytes = 0.0
+            mo = _OPERANDS_RE.search(raw[raw.index("dot("):])
+            if mc and mo:
+                names = _NAME_RE.findall(mo.group(1))
+                lhs_dims, _ = shapes.get(names[0], ([], 0)) if names else ([], 0)
+                for nm in names[:2]:
+                    operand_bytes += shapes.get(nm, ([], 0))[1]
+                # inline-typed operands (older dumps) as fallback
+                if not lhs_dims:
+                    lhs_t = _SHAPE_RE.search(mo.group(1))
+                    if lhs_t and lhs_t.group(2):
+                        lhs_dims = [int(d) for d in lhs_t.group(2).split(",")]
+                for idx in (int(i) for i in mc.group(1).split(",") if i):
+                    if idx < len(lhs_dims):
+                        contract *= lhs_dims[idx]
+            comps[cur]["dot_flops"] += 2.0 * out_elems * contract
+            # matmul-centric HBM traffic: operands read + result written
+            comps[cur]["dot_bytes"] += operand_bytes + rbytes
+
+        # call edges; fusion-internal computations don't touch HBM, so tag
+        # those edges to exclude them from the touch_bytes multiplier map.
+        if opname == "while":
+            mt = _TRIP_RE.search(raw)
+            trip = int(mt.group(1)) if mt else 1
+            for ref in _REF_RE.finditer(raw):
+                kind = ref.group(0).split("=")[0]
+                edges[cur].append((ref.group(1),
+                                   trip if kind == "body" else 1, False))
+        else:
+            fused = opname == "fusion"
+            for ref in _REF_RE.finditer(raw):
+                edges[cur].append((ref.group(1), 1, fused))
+            mb = _BRANCH_RE.search(raw)
+            if mb:
+                for b in mb.group(1).split(","):
+                    edges[cur].append((b.strip().lstrip("%"), 1, False))
+
+    return {"comps": comps, "edges": dict(edges), "entry": entry}
+
+
+def _multipliers(entry: str, edges: Dict[str, list],
+                 skip_fusion: bool) -> Dict[str, float]:
+    """Fixpoint propagation of call-site multipliers over the (DAG) call
+    graph; iteration count bounds the nesting depth."""
+    mult: Dict[str, float] = {entry: 1.0}
+    for _ in range(64):
+        new: Dict[str, float] = defaultdict(float)
+        new[entry] = 1.0
+        for caller, outs in edges.items():
+            m = mult.get(caller, 0.0)
+            if m == 0.0:
+                continue
+            for callee, t, fused in outs:
+                if skip_fusion and fused:
+                    continue
+                new[callee] += m * t
+        new[entry] = 1.0
+        if dict(new) == dict(mult):
+            break
+        mult = dict(new)
+    return mult
+
+
+def aggregate(parsed: Dict) -> Dict[str, float]:
+    """Propagate multipliers from entry through the call graph and sum."""
+    comps, edges, entry = parsed["comps"], parsed["edges"], parsed["entry"]
+    if entry is None:                                     # pragma: no cover
+        entry = next(iter(comps))
+    mult = _multipliers(entry, edges, skip_fusion=False)
+    mult_hbm = _multipliers(entry, edges, skip_fusion=True)
+
+    totals: Dict[str, float] = defaultdict(float)
+    for name, cost in comps.items():
+        m = mult.get(name, 0.0)
+        mh = mult_hbm.get(name, 0.0)
+        for k, v in cost.items():
+            if k == "touch_bytes":
+                totals[k] += mh * v
+            else:
+                totals[k] += m * v
+    totals["collective_bytes"] = sum(
+        totals[f"{k}_bytes"] for k in _COLLECTIVES)
+    return dict(totals)
+
+
+def hlo_costs(txt: str) -> Dict[str, float]:
+    return aggregate(parse_module(txt))

@@ -1,0 +1,231 @@
+"""Abstract input/parameter specs for the dry-run and roofline analysis.
+
+Everything here is ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable,
+zero device allocation. ``input_specs(arch, shape)`` is the contract the
+brief requires: stand-ins for every model input of each
+(architecture × input-shape) pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.base import ModelConfig
+from repro.core.netes import NetESConfig
+from repro.distributed import netes_dist, sharding
+from repro.models import transformer
+
+SDS = jax.ShapeDtypeStruct
+
+# Archs whose per-agent replica exceeds v5e HBM at model-parallel 16.
+# Capacity rule: replica mode needs ≈ 2.2 × params_bf16 / 16 chips
+# (θ + perturbed θ + transients) + activations ≤ 16 GB ⇒ ≲ 20 B params.
+CONSENSUS_ARCHS = (
+    "llama4-maverick-400b-a17b",     # ~400 B
+    "llama4-scout-17b-a16e",         # ~109 B total (17 B active)
+    "jamba-v0.1-52b",                # 52 B
+)
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class PairSpec:
+    """Everything needed to lower one (arch × shape × mesh) combination."""
+    arch: str
+    shape_name: str
+    mode: str                 # replica | consensus | serve
+    kind: str                 # train | prefill | decode
+    cfg: ModelConfig
+    n_agents: int
+
+
+def classify(arch: str, shape_name: str, mesh: Mesh) -> PairSpec:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    kind = shape["kind"]
+    if kind == "train":
+        mode = "consensus" if arch in CONSENSUS_ARCHS else "replica"
+        if mode == "consensus":
+            # time-multiplexed population: each member's microbatch must
+            # shard over ALL data axes (pod×data on the multi-pod mesh)
+            n = shape["global_batch"] // sharding.n_agents(mesh)
+        else:
+            n = sharding.n_agents(mesh)
+    else:
+        mode, n = "serve", 0
+    return PairSpec(arch=arch, shape_name=shape_name, mode=mode, kind=kind,
+                    cfg=cfg, n_agents=n)
+
+
+# ---------------------------------------------------------------------------
+# abstract parameter trees
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, dtype=PARAM_DTYPE) -> Any:
+    shaped = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+    return shaped
+
+
+def stack_abstract(tree: Any, n: int) -> Any:
+    return jax.tree.map(lambda l: SDS((n,) + tuple(l.shape), l.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _train_batch_specs(cfg: ModelConfig, seq: int, global_batch: int,
+                       n_groups: int, dtype=PARAM_DTYPE) -> Dict[str, Any]:
+    """Batch tree shaped (n_groups, per_group, ...) for replica/consensus."""
+    per = global_batch // n_groups
+    assert per >= 1, (cfg.name, global_batch, n_groups)
+    s_text = seq
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        s_text = seq - cfg.num_patches
+        out["patch_embeds"] = SDS((n_groups, per, cfg.num_patches,
+                                   cfg.d_model), dtype)
+    elif cfg.frontend == "audio":
+        out["frames"] = SDS((n_groups, per, cfg.encoder_seq, cfg.d_model),
+                            dtype)
+    out["tokens"] = SDS((n_groups, per, s_text), jnp.int32)
+    out["labels"] = SDS((n_groups, per, s_text), jnp.int32)
+    return out
+
+
+def _serve_batch_specs(cfg: ModelConfig, seq: int, batch: int,
+                       dtype=PARAM_DTYPE) -> Dict[str, Any]:
+    s_text = seq
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        s_text = seq - cfg.num_patches
+        out["patch_embeds"] = SDS((batch, cfg.num_patches, cfg.d_model), dtype)
+    elif cfg.frontend == "audio":
+        out["frames"] = SDS((batch, cfg.encoder_seq, cfg.d_model), dtype)
+    out["tokens"] = SDS((batch, s_text), jnp.int32)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=PARAM_DTYPE) -> Any:
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len, dtype))
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh,
+                dtype=PARAM_DTYPE) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step
+    (params, adjacency, batch/cache, rng key), plus their PartitionSpecs."""
+    pair = classify(arch, shape_name, mesh)
+    cfg = pair.cfg
+    shape = INPUT_SHAPES[shape_name]
+    seq, gbatch = shape["seq_len"], shape["global_batch"]
+    params_abs = abstract_params(cfg, dtype)
+    key_spec = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    if pair.kind == "train":
+        n = pair.n_agents
+        if pair.mode == "replica":
+            params_abs = stack_abstract(params_abs, n)
+        batch_abs = _train_batch_specs(cfg, seq, gbatch, n, dtype)
+        adj_abs = SDS((n, n), jnp.float32)
+        args = {
+            "params": params_abs,
+            "adj": adj_abs,
+            "batch": batch_abs,
+            "key": key_spec,
+        }
+        specs = {
+            "params": sharding.param_pspecs(cfg, params_abs, pair.mode, mesh),
+            "adj": P(None, None),
+            "batch": sharding.train_batch_pspecs(cfg, batch_abs, pair.mode,
+                                                 mesh),
+            "key": P(),
+        }
+    elif pair.kind == "prefill":
+        batch_abs = _serve_batch_specs(cfg, seq, gbatch, dtype)
+        args = {"params": params_abs, "batch": batch_abs}
+        specs = {
+            "params": sharding.param_pspecs(cfg, params_abs, "serve", mesh),
+            "batch": sharding.serve_batch_pspecs(cfg, batch_abs, mesh, gbatch),
+        }
+    else:  # decode
+        cache_abs = abstract_cache(cfg, gbatch, seq, dtype)
+        args = {
+            "params": params_abs,
+            "token": SDS((gbatch, 1), jnp.int32),
+            "cache": cache_abs,
+            "pos": SDS((gbatch,), jnp.int32),
+        }
+        ndata = int(np.prod([mesh.shape[a] for a in sharding.data_axes(mesh)]))
+        bspec = P(sharding.data_axes(mesh)) if gbatch % ndata == 0 else P(None)
+        specs = {
+            "params": sharding.param_pspecs(cfg, params_abs, "serve", mesh),
+            "token": P(*bspec, None),
+            "cache": sharding.cache_pspecs(cfg, cache_abs, mesh, gbatch),
+            "pos": bspec,
+        }
+    return {"pair": pair, "args": args, "specs": specs}
+
+
+# ---------------------------------------------------------------------------
+# step builders for lowering
+# ---------------------------------------------------------------------------
+
+def build_step(pair: PairSpec, mesh: Mesh,
+               ncfg: Optional[NetESConfig] = None):
+    """Returns (fn, arg_order) — fn takes the args dict's values in order."""
+    ncfg = ncfg or NetESConfig()
+    cfg = pair.cfg
+    if pair.kind == "train":
+        if pair.mode == "replica":
+            step = netes_dist.make_replica_train_step(
+                cfg, ncfg, pair.n_agents, sharding.agent_axes(mesh))
+        else:
+            step = netes_dist.make_consensus_train_step(cfg, ncfg,
+                                                        pair.n_agents)
+        return step, ("params", "adj", "batch", "key")
+    if pair.kind == "prefill":
+        return netes_dist.make_prefill_step(cfg), ("params", "batch")
+    decode = netes_dist.make_decode_step(cfg)
+    return decode, ("params", "token", "cache", "pos")
+
+
+def named_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_pair(arch: str, shape_name: str, mesh: Mesh,
+               ncfg: Optional[NetESConfig] = None, dtype=PARAM_DTYPE):
+    """Lower one (arch × shape × mesh). Returns (lowered, pair)."""
+    info = input_specs(arch, shape_name, mesh, dtype)
+    pair = info["pair"]
+    fn, order = build_step(pair, mesh, ncfg)
+    args = [info["args"][k] for k in order]
+    in_shardings = tuple(named_shardings(mesh, info["specs"][k])
+                         for k in order)
+    roles = sharding.activation_roles(pair.cfg, pair.mode, mesh, pair.kind)
+    # donate the state that the step replaces (params for train, the KV
+    # cache for decode) so the output aliases the input buffer
+    donate = ()
+    if pair.kind == "train":
+        donate = (0,)
+    elif pair.kind == "decode":
+        donate = (order.index("cache"),)
+    jitted = jax.jit(fn, in_shardings=in_shardings, donate_argnums=donate)
+    from repro.distributed.context import sharding_context
+    with mesh, sharding_context(mesh, roles):
+        lowered = jitted.lower(*args)
+    return lowered, pair

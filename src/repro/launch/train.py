@@ -1,0 +1,66 @@
+"""Training launcher.
+
+RL (the paper's experiments):
+  python -m repro.launch.train rl --task pendulum --topology erdos_renyi \
+      --agents 50 --iters 150
+LM (NetES over a registry architecture, reduced scale):
+  python -m repro.launch.train lm --arch gemma3-4b-smoke --agents 8 \
+      --iters 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+from repro.configs import get_config
+from repro.core.netes import NetESConfig
+from repro.train.loop import TrainConfig, train_lm_netes, train_rl_netes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("kind", choices=["rl", "lm"])
+    ap.add_argument("--task", default="pendulum")
+    ap.add_argument("--arch", default="gemma3-4b-smoke")
+    ap.add_argument("--topology", default="erdos_renyi")
+    ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--agents", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--alpha", type=float, default=0.05)
+    ap.add_argument("--sigma", type=float, default=0.1)
+    ap.add_argument("--p-broadcast", type=float, default=0.8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    tc = TrainConfig(
+        n_agents=args.agents, iters=args.iters,
+        topology_family=args.topology, density=args.density,
+        seed=args.seed,
+        netes=NetESConfig(alpha=args.alpha, sigma=args.sigma,
+                          p_broadcast=args.p_broadcast))
+
+    def log(d):
+        print(json.dumps(d))
+
+    if args.kind == "rl":
+        hist = train_rl_netes(args.task, tc, log=log)
+        print(f"final eval: {hist['final_eval']}, max eval: "
+              f"{hist['max_eval']} ({hist['wall_s']:.1f}s)")
+    else:
+        cfg = get_config(args.arch)
+        hist = train_lm_netes(cfg, tc, seq_len=args.seq_len, log=log)
+        print(f"loss: {hist['loss_mean'][0]:.4f} → "
+              f"{hist['loss_mean'][-1]:.4f}")
+    if args.out:
+        path = pathlib.Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"args": vars(args), "history": hist}, default=str))
+
+
+if __name__ == "__main__":
+    main()

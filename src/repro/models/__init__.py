@@ -1,0 +1,9 @@
+from . import attention, frontends, layers, mamba, moe, rwkv6, transformer
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          loss_fn)
+
+__all__ = [
+    "attention", "frontends", "layers", "mamba", "moe", "rwkv6",
+    "transformer", "decode_step", "forward", "init_cache", "init_params",
+    "loss_fn",
+]

@@ -1,0 +1,27 @@
+"""Modality frontend STUBS (the one allowed carve-out, per the brief).
+
+We do not implement the mel-spectrogram/conv codec (whisper) or the
+SigLIP/CLIP vision tower + projector (llava). Instead these providers emit
+*precomputed* frame/patch embeddings of the right shape — real deployments
+would plug the actual towers in here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frames(key: jax.Array, cfg: ModelConfig, batch: int,
+                 dtype=jnp.float32) -> jax.Array:
+    """Stub whisper encoder input: (B, encoder_seq, d_model)."""
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.encoder_seq, cfg.d_model), dtype=dtype)
+
+
+def vision_patches(key: jax.Array, cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32) -> jax.Array:
+    """Stub llava anyres patch embeddings: (B, num_patches, d_model)."""
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.num_patches, cfg.d_model), dtype=dtype)

@@ -1,0 +1,134 @@
+"""Shared transformer building blocks (functional, pytree params).
+
+Conventions:
+* params are nested dicts of jnp arrays; init functions are pure (usable
+  under ``jax.eval_shape`` for the dry-run's abstract parameter trees).
+* all inits take an explicit PRNG key and a ``dtype``.
+* activations use the same dtype as params unless stated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key: jax.Array, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Variance in fp32 (fused convert→square→reduce chain — single
+    consumer, so no fp32 copy of x is materialized); the rescale multiply
+    stays in x.dtype."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * params["scale"]
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)               # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key: jax.Array, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    up = x @ params["w_up"]
+    return (gate * up) @ params["w_down"]
+
+
+def gelu_mlp_init(key: jax.Array, d_model: int, d_ff: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype=dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype),
+        "b_out": jnp.zeros((d_model,), dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    return h @ params["w_out"] + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token xent; logits (..., V) possibly vocab-sharded (XLA inserts
+    the collectives for the reductions), labels int (...,).
+
+    Deliberately structured so the only materialized (..., V) buffer is the
+    incoming logits in their own dtype: the max/sum reductions consume
+    element-wise chains (subtract → convert → exp) that XLA fuses into the
+    reduction — a wholesale ``logits.astype(f32)`` would materialize a
+    second full-vocab buffer (4 GiB/device at gemma3 train shapes).
+    """
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    sumexp = jnp.exp((logits - m).astype(jnp.float32)).sum(axis=-1)
+    lse = jnp.log(sumexp) + m[..., 0].astype(jnp.float32)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - picked.astype(jnp.float32)

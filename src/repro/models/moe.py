@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN with group-wise capacity dispatch (GShard-style).
+
+Dispatch is *gather-based* (argsort + fixed-capacity index matrices), not the
+one-hot-einsum formulation — O(T·k) index work instead of O(T·E·C) dispatch
+FLOPs. Tokens are processed in groups (sub-sequences) so the sort is local
+to a group and never crosses shard boundaries when groups align with the
+batch sharding; capacity is enforced per group (GShard semantics — overflow
+tokens within a group are dropped, i.e. pass through the residual only).
+
+Sharding intent (see distributed/sharding.py):
+  * train/replica mode: expert dim over "model" mesh axis.
+  * consensus/serve mode (maverick-class): expert dim over "data"
+    (expert-parallel) + per-expert d_ff over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    experts_per_token: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    group_size: int = 512
+    router_jitter: float = 0.0
+
+
+def moe_init(key: jax.Array, spec: MoESpec, dtype):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, d, f = spec.num_experts, spec.d_model, spec.d_ff
+    return {
+        "router": layers.dense_init(kr, (d, e), jnp.float32),
+        "w_gate": layers.dense_init(kg, (e, d, f), dtype),
+        "w_up": layers.dense_init(ku, (e, d, f), dtype),
+        "w_down": layers.dense_init(kd, (e, f, d), dtype),
+    }
+
+
+def group_capacity(spec: MoESpec, group: int) -> int:
+    c = int(group * spec.experts_per_token * spec.capacity_factor
+            / spec.num_experts)
+    return max(c, spec.experts_per_token)
+
+
+def _dispatch_indices(expert_ids: jax.Array, k: int, num_experts: int,
+                      capacity: int):
+    """Per-group routing bookkeeping.
+
+    expert_ids: (g, k) int32 — chosen experts per token in the group.
+    Returns (idx, keep_dst) where idx: (E, C) token index per slot (g ⇒
+    empty/overflow), and dst: (g, k) slot each (token, choice) landed in
+    (E*C ⇒ dropped).
+    """
+    g = expert_ids.shape[0]
+    flat_e = expert_ids.reshape(-1)                      # (g·k,)
+    flat_t = jnp.arange(g * k, dtype=jnp.int32) // k     # token of each choice
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_t = flat_t[order]
+    # position within expert segment: arange − (index of segment start),
+    # segment starts found via running max of "is this a boundary" indices.
+    ar = jnp.arange(g * k, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.array([True]), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, ar, 0))
+    pos = ar - seg_start
+    keep = pos < capacity
+    dst = jnp.where(keep, sorted_e * capacity + pos, num_experts * capacity)
+    idx = jnp.full((num_experts * capacity + 1,), g, dtype=jnp.int32)
+    idx = idx.at[dst].set(sorted_t, mode="drop")[:-1]
+    # map back: slot for each (token, choice) in original order
+    dst_orig = jnp.zeros((g * k,), dtype=jnp.int32).at[order].set(dst)
+    return idx.reshape(num_experts, capacity), dst_orig.reshape(g, k)
+
+
+def _moe_group(params, spec: MoESpec, x: jax.Array, capacity: int) -> jax.Array:
+    """Route one group. x: (g, D) → (g, D)."""
+    g, d = x.shape
+    e, k = spec.num_experts, spec.experts_per_token
+    logits = (x.astype(jnp.float32) @ params["router"])          # (g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+    idx, dst = _dispatch_indices(expert_ids.astype(jnp.int32), k, e, capacity)
+
+    xp = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])        # pad row
+    xe = xp[idx]                                                  # (E, C, D)
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, params["w_down"])
+
+    # combine: scatter slots back to tokens with gate weights
+    yflat = y.reshape(e * capacity, d)
+    yflat = jnp.concatenate([yflat, jnp.zeros((1, d), y.dtype)])  # drop slot
+    dst_c = jnp.minimum(dst, e * capacity)
+    out = (yflat[dst_c] * gate_vals[..., None].astype(y.dtype)).sum(axis=1)
+    return out.astype(x.dtype)
+
+
+def moe_block(params, spec: MoESpec, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) → (B, S, D).
+
+    §Perf note: a cap of group ≤ S/16 (to align token groups with sequence
+    shards) was hypothesized to remove a dispatch reshard; measured −3% on
+    scout and a 2× REGRESSION on maverick (capacity shrank to the drop
+    threshold and the dispatch gather became an all-reduce) — reverted.
+    See EXPERIMENTS.md §Perf [I5].
+    """
+    b, s, d = x.shape
+    group = min(spec.group_size, s)
+    assert s % group == 0, f"seq {s} not divisible by group {group}"
+    xg = x.reshape(b * s // group, group, d)
+    cap = group_capacity(spec, group)
+    out = jax.vmap(lambda t: _moe_group(params, spec, t, cap))(xg)
+    return out.reshape(b, s, d)
+
+
+def load_balance_loss(params, spec: MoESpec, x: jax.Array) -> jax.Array:
+    """Switch-style auxiliary loss: E · Σ_e f_e · p_e (for monitoring /
+    optional reward shaping in ES)."""
+    b, s, d = x.shape
+    logits = x.reshape(-1, d).astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top1 = jax.lax.top_k(probs, 1)
+    frac = jnp.mean(jax.nn.one_hot(top1[:, 0], spec.num_experts), axis=0)
+    return spec.num_experts * jnp.sum(frac * probs.mean(axis=0))
+
+
+def moe_ref(params, spec: MoESpec, x: jax.Array) -> jax.Array:
+    """Dense all-experts reference (oracle for tests): computes every expert
+    on every token and combines with the full top-k gate — no capacity drops.
+    Only valid to compare against ``moe_block`` with capacity ≥ group
+    (no overflow)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, spec.experts_per_token)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+    gates = jnp.zeros_like(probs)
+    gates = jax.vmap(lambda gr, iv, gv: gr.at[iv].set(gv))(
+        gates, expert_ids, gate_vals)
+    h = jnp.einsum("td,edf->tef", xf, params["w_gate"])
+    u = jnp.einsum("td,edf->tef", xf, params["w_up"])
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * u, params["w_down"])
+    out = jnp.einsum("te,ted->td", gates.astype(y.dtype), y)
+    return out.reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,465 @@
+"""Model assembly: config-driven decoder (and encoder-decoder) stacks.
+
+One code path covers all ten assigned architectures: the per-layer
+``LayerSpec`` (derived from ``ModelConfig``) picks the sequence mixer
+(full/sliding/chunked attention, mamba, rwkv) and channel mixer
+(swiglu/gelu/moe/rwkv_channel). VLM/audio frontends are stub embedding
+providers (``frontends.py``) — early fusion happens here by concatenating
+frontend embeddings before token embeddings.
+
+API (all pure functions over pytrees):
+  init_params(key, cfg, dtype)                  -> params
+  forward(params, cfg, batch)                   -> logits (B, S, V)
+  loss_fn(params, cfg, batch)                   -> scalar mean xent
+  init_cache(cfg, batch, max_len, dtype)        -> decode cache pytree
+  decode_step(params, cfg, token, cache, pos)   -> (logits (B,1,V), cache')
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.context import maybe_constrain
+
+from . import attention, layers, mamba, moe, rwkv6
+
+
+# ---------------------------------------------------------------------------
+# spec builders
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig, lspec: LayerSpec) -> attention.AttnSpec:
+    kind = {"attn_full": "full", "attn_sliding": "sliding",
+            "attn_chunked": "chunked"}[lspec.mixer]
+    return attention.AttnSpec(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim,
+        kind=kind,
+        window=lspec.window,
+        rope=cfg.use_rope,
+        rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm,
+    )
+
+
+def mamba_spec(cfg: ModelConfig) -> mamba.MambaSpec:
+    return mamba.MambaSpec(d_model=cfg.d_model, d_state=cfg.mamba_d_state,
+                           d_conv=cfg.mamba_d_conv, expand=cfg.mamba_expand)
+
+
+def rwkv_spec(cfg: ModelConfig) -> rwkv6.RWKV6Spec:
+    return rwkv6.RWKV6Spec(d_model=cfg.d_model, num_heads=cfg.num_heads)
+
+
+def moe_spec(cfg: ModelConfig) -> moe.MoESpec:
+    return moe.MoESpec(num_experts=cfg.num_experts,
+                       experts_per_token=cfg.experts_per_token,
+                       d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       capacity_factor=cfg.moe_capacity_factor,
+                       group_size=cfg.moe_group_size)
+
+
+def _norm_init(cfg: ModelConfig, d: int, dtype):
+    return (layers.layernorm_init(d, dtype) if cfg.norm == "layernorm"
+            else layers.rmsnorm_init(d, dtype))
+
+
+# ---------------------------------------------------------------------------
+# layer stacking plan (scan-over-layers)
+# ---------------------------------------------------------------------------
+
+def stack_plan(cfg: ModelConfig):
+    """(head, period, n_rep, tail): layers [0, head) run unrolled, then
+    ``n_rep`` repetitions of a ``period``-layer body run under ``lax.scan``
+    (params stacked on a leading n_rep axis), then ``tail`` layers unrolled.
+
+    Scanning identical-structure periods shrinks the HLO by ~n_rep× —
+    essential for SPMD compile times at 512 partitions — and is exactly how
+    production JAX LLM frameworks structure deep stacks.
+    """
+    specs = cfg.layer_specs()
+    length = len(specs)
+    best = (0, length, 1, 0)                       # fallback: all unrolled
+    for head in range(0, min(length, 3)):
+        for period in range(1, length - head + 1):
+            if all(specs[i] == specs[head + (i - head) % period]
+                   for i in range(head, length)):
+                n_rep = (length - head) // period
+                tail = (length - head) % period
+                if n_rep >= 4 and n_rep > best[2]:
+                    best = (head, period, n_rep, tail)
+                break                               # smallest period found
+    return best
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return (layers.layernorm(p, x) if cfg.norm == "layernorm"
+            else layers.rmsnorm(p, x))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, lspec: LayerSpec, dtype,
+                cross: bool = False) -> Dict[str, Any]:
+    kmix, kffn, kcross = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": _norm_init(cfg, cfg.d_model, dtype),
+                         "norm2": _norm_init(cfg, cfg.d_model, dtype)}
+    if lspec.mixer.startswith("attn"):
+        p["attn"] = attention.attn_init(kmix, cfg.d_model,
+                                        attn_spec(cfg, lspec), dtype)
+    elif lspec.mixer == "mamba":
+        p["mamba"] = mamba.mamba_init(kmix, mamba_spec(cfg), dtype)
+    elif lspec.mixer == "rwkv":
+        p["rwkv"] = rwkv6.rwkv6_init(kmix, rwkv_spec(cfg), dtype)
+    if lspec.ffn == "swiglu":
+        p["ffn"] = layers.swiglu_init(kffn, cfg.d_model, cfg.d_ff, dtype)
+    elif lspec.ffn == "gelu":
+        p["ffn"] = layers.gelu_mlp_init(kffn, cfg.d_model, cfg.d_ff, dtype)
+    elif lspec.ffn == "moe":
+        p["moe"] = moe.moe_init(kffn, moe_spec(cfg), dtype)
+    elif lspec.ffn == "rwkv_channel":
+        p["ffn"] = rwkv6.rwkv6_channel_init(kffn, cfg.d_model, cfg.d_ff, dtype)
+    if cross:
+        p["cross"] = attention.attn_init(
+            kcross, cfg.d_model,
+            attn_spec(cfg, LayerSpec("attn_full", "swiglu")), dtype)
+        p["norm_cross"] = _norm_init(cfg, cfg.d_model, dtype)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ModelConfig,
+                dtype=jnp.float32) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.num_layers + cfg.encoder_layers + 4)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.learned_pos:
+        params["pos_embed"] = layers.embed_init(
+            keys[2], cfg.max_position, cfg.d_model, dtype)
+    cross = cfg.is_encoder_decoder
+    all_layers = [
+        _layer_init(keys[4 + i], cfg, ls, dtype, cross=cross)
+        for i, ls in enumerate(cfg.layer_specs())
+    ]
+    head, period, n_rep, tail = stack_plan(cfg)
+    if n_rep > 1:
+        params["layers_head"] = all_layers[:head]
+        params["layers_scan"] = [
+            jax.tree.map(lambda *ls: jnp.stack(ls),
+                         *[all_layers[head + r * period + j]
+                           for r in range(n_rep)])
+            for j in range(period)
+        ]
+        params["layers_tail"] = all_layers[head + n_rep * period:]
+    else:
+        params["layers_head"] = all_layers
+        params["layers_scan"] = []
+        params["layers_tail"] = []
+    if cfg.is_encoder_decoder:
+        enc_ls = LayerSpec(mixer="attn_full", ffn=cfg.ffn_kind)
+        params["enc_layers"] = [
+            _layer_init(keys[4 + cfg.num_layers + i], cfg, enc_ls, dtype)
+            for i in range(cfg.encoder_layers)
+        ]
+        params["enc_norm"] = _norm_init(cfg, cfg.d_model, dtype)
+        if cfg.learned_pos:
+            params["enc_pos_embed"] = layers.embed_init(
+                keys[3], cfg.encoder_seq, cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(p, cfg: ModelConfig, lspec: LayerSpec, x: jax.Array,
+                   positions: jax.Array, enc_out: Optional[jax.Array] = None,
+                   enc_pos: Optional[jax.Array] = None,
+                   causal: bool = True) -> jax.Array:
+    h = _norm(cfg, p["norm1"], x)
+    if lspec.mixer.startswith("attn"):
+        mix = attention.attention_block(p["attn"], attn_spec(cfg, lspec), h,
+                                        positions, causal=causal)
+    elif lspec.mixer == "mamba":
+        mix = mamba.mamba_block(p["mamba"], mamba_spec(cfg), h)
+    elif lspec.mixer == "rwkv":
+        mix = rwkv6.rwkv6_block(p["rwkv"], rwkv_spec(cfg), h)
+    else:
+        raise ValueError(lspec.mixer)
+    x = x + mix
+    if enc_out is not None:
+        hc = _norm(cfg, p["norm_cross"], x)
+        x = x + attention.attention_block(
+            p["cross"], attn_spec(cfg, LayerSpec("attn_full", "swiglu")),
+            hc, positions, kv_x=enc_out, kv_positions=enc_pos, causal=False)
+    h = _norm(cfg, p["norm2"], x)
+    if lspec.ffn in ("swiglu",):
+        f = layers.swiglu(p["ffn"], maybe_constrain(h, "ffn_input"))
+        # reduce-scatter the w_down partial sums straight back to the
+        # S-sharded residual layout (instead of a 2× all-reduce)
+        f = maybe_constrain(f, "residual")
+    elif lspec.ffn == "gelu":
+        f = layers.gelu_mlp(p["ffn"], maybe_constrain(h, "ffn_input"))
+        f = maybe_constrain(f, "residual")
+    elif lspec.ffn == "moe":
+        f = moe.moe_block(p["moe"], moe_spec(cfg), h)
+    elif lspec.ffn == "rwkv_channel":
+        f = rwkv6.rwkv6_channel(p["ffn"], h)
+    else:
+        raise ValueError(lspec.ffn)
+    return x + f
+
+
+def _encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings (B, T, D)."""
+    x = frames
+    if cfg.learned_pos and "enc_pos_embed" in params:
+        t = x.shape[1]
+        x = x + params["enc_pos_embed"][None, :t].astype(x.dtype)
+    pos = jnp.arange(x.shape[1])
+    enc_ls = LayerSpec(mixer="attn_full", ffn=cfg.ffn_kind)
+    for p in params["enc_layers"]:
+        x = _layer_forward(p, cfg, enc_ls, x, pos, causal=False)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Token (+frontend) embedding with early fusion. Returns (x, positions,
+    enc_out, enc_pos)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]                       # (B, S_text, D)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)    # (B, P, D)
+        x = jnp.concatenate([pe, x], axis=1)          # early fusion
+    if cfg.learned_pos and "pos_embed" in params:
+        x = x + params["pos_embed"][None, :x.shape[1]].astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+    enc_out = enc_pos = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"].astype(x.dtype))
+        enc_pos = jnp.arange(enc_out.shape[1])
+    return x, positions, enc_out, enc_pos
+
+
+def _backbone(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Embed + all layers + final norm. Returns (x (B,S,D), aux)."""
+    x, positions, enc_out, enc_pos = embed_inputs(params, cfg, batch)
+    x = maybe_constrain(x, "residual")
+    specs = cfg.layer_specs()
+    head, period, n_rep, _ = stack_plan(cfg)
+    li = 0
+    for p in params["layers_head"]:
+        x = _layer_forward(p, cfg, specs[li], x, positions, enc_out, enc_pos)
+        x = maybe_constrain(x, "residual")
+        li += 1
+    if params["layers_scan"]:
+        body_specs = specs[li:li + period]
+
+        def body(xc, slice_params):
+            for j in range(period):
+                xc = _layer_forward(slice_params[j], cfg, body_specs[j], xc,
+                                    positions, enc_out, enc_pos)
+                xc = maybe_constrain(xc, "residual")
+            return xc, None
+
+        x, _ = jax.lax.scan(body, x, tuple(params["layers_scan"]))
+        li += n_rep * period
+    for p in params["layers_tail"]:
+        x = _layer_forward(p, cfg, specs[li], x, positions, enc_out, enc_pos)
+        x = maybe_constrain(x, "residual")
+        li += 1
+    x = _norm(cfg, params["final_norm"], x)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return x @ params["lm_head"]
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Returns logits (B, S_total, V)."""
+    return unembed(params, cfg, _backbone(params, cfg, batch))
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            xent_chunk: int = 512) -> jax.Array:
+    """Mean next-token cross-entropy, with the unembed+xent computed in
+    sequence chunks so the (B, S, V) logits tensor is never materialized
+    (at gemma3 train shapes it would be 4 GiB/device fp32)."""
+    x = _backbone(params, cfg, batch)
+    labels = batch["labels"]
+    if x.shape[1] != labels.shape[1]:            # vlm: drop frontend positions
+        x = x[:, x.shape[1] - labels.shape[1]:]
+    b, s, d = x.shape
+    # next-token targets with the final position masked out (keeps S intact
+    # so the chunking below stays aligned with the sequence sharding)
+    labels_next = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+    mask = jnp.arange(s) < s - 1                 # (S,)
+    denom = b * (s - 1)
+    if s % xent_chunk != 0 or s <= xent_chunk:
+        per_tok = layers.softmax_cross_entropy(
+            unembed(params, cfg, x), labels_next)
+        return (per_tok * mask[None]).sum() / denom
+    nc = s // xent_chunk
+    xs = x.reshape(b, nc, xent_chunk, d).swapaxes(0, 1)
+    ls = labels_next.reshape(b, nc, xent_chunk).swapaxes(0, 1)
+    ms = mask.reshape(nc, xent_chunk)
+
+    def chunk_loss(args):
+        xc, lc, mc = args
+        per_tok = layers.softmax_cross_entropy(unembed(params, cfg, xc), lc)
+        return (per_tok * mc[None]).sum()
+
+    losses = jax.lax.map(chunk_loss, (xs, ls, ms))
+    return losses.sum() / denom
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, ls: LayerSpec, batch: int, max_len: int,
+                 dtype) -> Dict[str, Any]:
+    c: Dict[str, Any] = {}
+    if ls.mixer.startswith("attn"):
+        c["kv"] = attention.init_kv_cache(batch, attn_spec(cfg, ls),
+                                          max_len, dtype)
+    elif ls.mixer == "mamba":
+        c["mamba"] = mamba.init_mamba_cache(batch, mamba_spec(cfg), dtype)
+    elif ls.mixer == "rwkv":
+        c["rwkv"] = rwkv6.init_rwkv_cache(batch, rwkv_spec(cfg), dtype)
+        c["channel_x_prev"] = jnp.zeros((batch, 1, cfg.d_model), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               enc_len: Optional[int] = None) -> Dict[str, Any]:
+    """Decode cache pytree, mirroring the head/scan/tail layer structure."""
+    specs = cfg.layer_specs()
+    head, period, n_rep, _ = stack_plan(cfg)
+    all_caches = [_layer_cache(cfg, ls, batch, max_len, dtype) for ls in specs]
+    cache: Dict[str, Any] = {}
+    if n_rep > 1:
+        cache["head"] = all_caches[:head]
+        cache["scan"] = [
+            jax.tree.map(lambda *cs: jnp.stack(cs),
+                         *[all_caches[head + r * period + j]
+                           for r in range(n_rep)])
+            for j in range(period)
+        ]
+        cache["tail"] = all_caches[head + n_rep * period:]
+    else:
+        cache["head"] = all_caches
+        cache["scan"] = []
+        cache["tail"] = []
+    if cfg.is_encoder_decoder:
+        el = enc_len or cfg.encoder_seq
+        cache["enc_out"] = jnp.zeros((batch, el, cfg.d_model), dtype)
+    return cache
+
+
+def _decode_layer(p, cfg: ModelConfig, ls: LayerSpec, x, c, pos,
+                  enc_out, enc_pos):
+    cnew = dict(c)
+    h = _norm(cfg, p["norm1"], x)
+    if ls.mixer.startswith("attn"):
+        mix, cnew["kv"] = attention.decode_attention(
+            p["attn"], attn_spec(cfg, ls), h, c["kv"], pos)
+    elif ls.mixer == "mamba":
+        mix, cnew["mamba"] = mamba.mamba_decode(
+            p["mamba"], mamba_spec(cfg), h, c["mamba"])
+    elif ls.mixer == "rwkv":
+        mix, cnew["rwkv"] = rwkv6.rwkv6_decode(
+            p["rwkv"], rwkv_spec(cfg), h, c["rwkv"])
+    else:
+        raise ValueError(ls.mixer)
+    x = x + mix
+    if enc_out is not None:
+        hc = _norm(cfg, p["norm_cross"], x)
+        cross, _ = _cross_decode(p["cross"], cfg, hc, enc_out, enc_pos, pos)
+        x = x + cross
+    h = _norm(cfg, p["norm2"], x)
+    if ls.ffn == "swiglu":
+        f = layers.swiglu(p["ffn"], h)
+    elif ls.ffn == "gelu":
+        f = layers.gelu_mlp(p["ffn"], h)
+    elif ls.ffn == "moe":
+        f = moe.moe_block(p["moe"], moe_spec(cfg), h)
+    elif ls.ffn == "rwkv_channel":
+        f = rwkv6.rwkv6_channel(p["ffn"], h, c.get("channel_x_prev"))
+        cnew["channel_x_prev"] = h
+    else:
+        raise ValueError(ls.ffn)
+    return x + f, cnew
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Dict,
+                pos: jax.Array):
+    """One-token decode. token: (B, 1) int32; pos: (B,) absolute position.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = params["embed"][token]                        # (B,1,D)
+    if cfg.learned_pos and "pos_embed" in params:
+        x = x + params["pos_embed"][pos][:, None].astype(x.dtype)
+    enc_out = cache.get("enc_out")
+    enc_pos = (jnp.arange(enc_out.shape[1]) if enc_out is not None else None)
+    specs = cfg.layer_specs()
+    head, period, n_rep, _ = stack_plan(cfg)
+    new_cache = dict(cache)
+    li = 0
+    new_head = []
+    for p, c in zip(params["layers_head"], cache["head"]):
+        x, cnew = _decode_layer(p, cfg, specs[li], x, c, pos, enc_out, enc_pos)
+        new_head.append(cnew)
+        li += 1
+    new_cache["head"] = new_head
+    if params["layers_scan"]:
+        body_specs = specs[li:li + period]
+
+        def body(xc, inp):
+            slice_params, slice_cache = inp
+            new_slices = []
+            for j in range(period):
+                xc, cnew = _decode_layer(slice_params[j], cfg, body_specs[j],
+                                         xc, slice_cache[j], pos,
+                                         enc_out, enc_pos)
+                new_slices.append(cnew)
+            return xc, tuple(new_slices)
+
+        x, new_scan = jax.lax.scan(
+            body, x, (tuple(params["layers_scan"]), tuple(cache["scan"])))
+        new_cache["scan"] = list(new_scan)
+        li += n_rep * period
+    new_tail = []
+    for p, c in zip(params["layers_tail"], cache["tail"]):
+        x, cnew = _decode_layer(p, cfg, specs[li], x, c, pos, enc_out, enc_pos)
+        new_tail.append(cnew)
+        li += 1
+    new_cache["tail"] = new_tail
+    x = _norm(cfg, params["final_norm"], x)
+    logits = unembed(params, cfg, x)
+    return logits, new_cache
+
+
+def _cross_decode(p, cfg: ModelConfig, x, enc_out, enc_pos, pos):
+    """Cross-attention for a single decode token (no cache mutation —
+    encoder KV is static). Query positions are irrelevant here: cross
+    attention is non-causal and whisper uses learned (not rotary) positions,
+    so a zero query position is exact."""
+    del pos
+    spec = attn_spec(cfg, LayerSpec("attn_full", "swiglu"))
+    q_pos = jnp.zeros((1,), jnp.int32)
+    out = attention.attention_block(p, spec, x, q_pos, kv_x=enc_out,
+                                    kv_positions=enc_pos, causal=False)
+    return out, None

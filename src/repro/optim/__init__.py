@@ -1,0 +1,4 @@
+from .adam import adam_init, adam_update
+from .sgd import sgd_update
+
+__all__ = ["adam_init", "adam_update", "sgd_update"]

@@ -1,0 +1,47 @@
+"""Adam (decoupled weight decay) — the backprop-path baseline optimizer.
+
+NetES is the paper's (gradient-free) technique; this gives the framework a
+conventional first-order path for comparisons/examples.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adam_init(params: Any) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def adam_update(params: Any, grads: Any, state: AdamState, *,
+                lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8, weight_decay: float = 0.0):
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = lr * (mhat / (jnp.sqrt(vhat) + eps)
+                      + weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(mu=mu, nu=nu, step=step)

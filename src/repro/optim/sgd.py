@@ -1,0 +1,16 @@
+"""Plain SGD with momentum (OpenAI-ES applies its estimate with Adam/SGD;
+kept for ablations)."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+def sgd_update(params: Any, grads: Any, momentum: Optional[Any] = None, *,
+               lr: float = 1e-2, beta: float = 0.9):
+    if momentum is None:
+        momentum = jax.tree.map(lambda g: g * 0.0, grads)
+    new_m = jax.tree.map(lambda m, g: beta * m + g, momentum, grads)
+    new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+    return new_p, new_m

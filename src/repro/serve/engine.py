@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + token-by-token decode with the same
+decode_step the dry-run lowers at decode_32k/long_500k shapes.
+
+Single-host engine (tests/examples); in production the jit'd steps carry
+the serve-mode shardings from distributed/sharding.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.dtype = dtype
+        self._decode = jax.jit(
+            partial(transformer.decode_step, cfg=cfg))
+
+    def _prefill(self, batch: Dict) -> jax.Array:
+        """Run the full-sequence forward; returns last-position logits."""
+        logits = transformer.forward(self.params, self.cfg, batch)
+        return logits[:, -1]
+
+    def generate(self, prompts: jax.Array, new_tokens: int = 16,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None,
+                 extra_batch: Optional[Dict] = None) -> np.ndarray:
+        """prompts: (B, S_prompt) int32 → (B, new_tokens) int32.
+
+        Prefill computes the prompt logits; the cache is then warmed by
+        teacher-forcing the prompt through decode_step (single-host
+        convenience — a production engine writes prefill KV directly).
+        """
+        b, s_prompt = prompts.shape
+        batch = {"tokens": prompts, **(extra_batch or {})}
+        cache = transformer.init_cache(self.cfg, b,
+                                       max(self.max_len,
+                                           s_prompt + new_tokens),
+                                       self.dtype)
+        if self.cfg.is_encoder_decoder:
+            enc = batch.get("frames")
+            if enc is None:
+                raise ValueError("encoder-decoder serving needs 'frames'")
+            from repro.models.transformer import _encode
+            cache["enc_out"] = _encode(self.params, self.cfg, enc)
+
+        # warm the cache on the prompt
+        for t in range(s_prompt):
+            logits, cache = self._decode(
+                self.params, token=prompts[:, t:t + 1], cache=cache,
+                pos=jnp.full((b,), t, jnp.int32))
+        out: List[np.ndarray] = []
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if temperature > 0 and key is not None:
+            key, sub = jax.random.split(key)
+            token = jax.random.categorical(
+                sub, logits / temperature).astype(jnp.int32)
+        out.append(np.asarray(token))
+        for i in range(1, new_tokens):
+            logits, cache = self._decode(
+                self.params, token=token, cache=cache,
+                pos=jnp.full((b,), s_prompt + i - 1, jnp.int32))
+            if temperature > 0 and key is not None:
+                key, sub = jax.random.split(key)
+                token = jax.random.categorical(
+                    sub, logits[:, 0] / temperature)[:, None].astype(jnp.int32)
+            else:
+                token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(token))
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from .loop import TrainConfig, train_lm_netes, train_rl_netes
+
+__all__ = ["TrainConfig", "train_lm_netes", "train_rl_netes"]

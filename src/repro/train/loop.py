@@ -1,0 +1,143 @@
+"""Training loops.
+
+* ``train_rl_netes`` — the paper's experiment: NetES over a population
+  solving an RL task (or synthetic landscape), with the paper's evaluation
+  protocol (periodic noise-free evaluation of the best agent, §5.2).
+* ``train_lm_netes`` — NetES driving a transformer LM from the arch
+  registry on the synthetic corpus (single-host, reduced scale), using the
+  same distributed step builders the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import netes, topology
+from repro.core.netes import NetESConfig
+from repro.data import make_batch
+from repro.distributed import netes_dist
+from repro.envs import ENVS, MLPPolicy, make_env_reward_fn, \
+    make_landscape_reward_fn
+from repro.envs.rollout import evaluate_best
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_agents: int = 32
+    iters: int = 100
+    topology_family: str = "erdos_renyi"
+    density: float = 0.5
+    topo_seed: int = 0
+    seed: int = 0
+    eval_every: int = 0             # 0 ⇒ paper protocol (prob 0.08)
+    eval_episodes: int = 16
+    netes: NetESConfig = dataclasses.field(default_factory=NetESConfig)
+
+
+def build_adjacency(tc: TrainConfig) -> jnp.ndarray:
+    kwargs = {}
+    if tc.topology_family not in ("fully_connected", "disconnected", "star",
+                                  "ring"):
+        kwargs["p"] = tc.density
+    return jnp.asarray(topology.make_topology(
+        tc.topology_family, tc.n_agents, seed=tc.topo_seed, **kwargs))
+
+
+def train_rl_netes(task: str, tc: TrainConfig,
+                   log: Optional[Callable[[Dict], None]] = None) -> Dict:
+    """Paper experiment driver. ``task``: env name or 'landscape:<name>'.
+
+    Returns history dict with train rewards and the paper's evaluation
+    metric trace (best-agent noise-free episodes).
+    """
+    key = jax.random.PRNGKey(tc.seed)
+    if task.startswith("landscape:"):
+        name = task.split(":", 1)[1]
+        reward_fn = make_landscape_reward_fn(name)
+        dim = 64
+        init_fn = lambda k: jax.random.normal(k, (dim,))  # noqa: E731
+        env = policy = None
+    else:
+        env = ENVS[task]()
+        policy = MLPPolicy(obs_dim=env.obs_dim, act_dim=env.act_dim)
+        reward_fn = make_env_reward_fn(env, policy)
+        dim = policy.num_params
+        init_fn = policy.init
+
+    adj = build_adjacency(tc)
+    state = netes.init_state(key, tc.n_agents, dim, init_fn=init_fn)
+    history: Dict[str, List] = {"reward_mean": [], "reward_max": [],
+                                "eval": [], "eval_iter": []}
+    eval_key = jax.random.PRNGKey(tc.seed + 999)
+    t0 = time.time()
+    for it in range(tc.iters):
+        state, m = netes.netes_step(state, adj, reward_fn, tc.netes)
+        history["reward_mean"].append(float(m["reward_mean"]))
+        history["reward_max"].append(float(m["reward_max"]))
+        # paper §5.2: with prob 0.08, pause and evaluate best params
+        eval_key, k_draw, k_eval = jax.random.split(eval_key, 3)
+        do_eval = (it % tc.eval_every == tc.eval_every - 1) if tc.eval_every \
+            else bool(jax.random.uniform(k_draw) < 0.08)
+        if do_eval or it == tc.iters - 1:
+            if env is not None:
+                score = float(evaluate_best(env, policy, state.best_theta,
+                                            k_eval, tc.eval_episodes))
+            else:
+                score = float(reward_fn(state.best_theta[None], k_eval)[0])
+            history["eval"].append(score)
+            history["eval_iter"].append(it)
+            if log:
+                log({"iter": it, "eval": score,
+                     "reward_mean": history["reward_mean"][-1]})
+    history["final_eval"] = history["eval"][-1] if history["eval"] else None
+    history["max_eval"] = max(history["eval"]) if history["eval"] else None
+    history["wall_s"] = time.time() - t0
+    return history
+
+
+def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
+                   per_agent_batch: int = 1, same_init: bool = True,
+                   log: Optional[Callable[[Dict], None]] = None) -> Dict:
+    """NetES-trains a registry architecture on the synthetic corpus using
+    the SAME replica step the dry-run lowers (single-host: agents live on
+    one device; the mesh axes are virtual here).
+
+    ``same_init=True`` (paper Eq. 1/2 regime): all agents start from one θ.
+    At LM scale, independently-initialized agents make Eq. 3's θ-difference
+    term O(weight-norm) × α/(Nσ²) — divergent for any useful α (the paper's
+    own Fig 3B control shows diff-init FC populations failing too).
+    """
+    key = jax.random.PRNGKey(tc.seed)
+    n = tc.n_agents
+    step = netes_dist.make_replica_train_step(
+        cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1)
+    step = jax.jit(step)
+    if same_init:
+        p0 = transformer.init_params(key, cfg)
+        params = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), p0)
+    else:
+        params = jax.vmap(lambda k: transformer.init_params(k, cfg))(
+            jax.random.split(key, n))
+    adj = build_adjacency(tc)
+    history: Dict[str, List] = {"loss_mean": [], "reward_max": []}
+    for it in range(tc.iters):
+        key, k_batch, k_step = jax.random.split(key, 3)
+        batch = make_batch(cfg, dict(seq_len=seq_len,
+                                     global_batch=n * per_agent_batch),
+                           k_batch)
+        batch = jax.tree.map(
+            lambda x: x.reshape((n, per_agent_batch) + x.shape[1:]), batch)
+        params, m = step(params, adj, batch, k_step)
+        history["loss_mean"].append(float(m["loss_mean"]))
+        history["reward_max"].append(float(m["reward_max"]))
+        if log and it % 10 == 0:
+            log({"iter": it, "loss": history["loss_mean"][-1]})
+    return history

@@ -1,0 +1,107 @@
+"""Per-architecture smoke tests (brief requirement): reduced variant of the
+same family — ≤2 layers, d_model ≤ 512, ≤4 experts — one forward/train step
+on CPU, asserting output shapes and no NaNs; plus a serve (decode) step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.netes import NetESConfig
+from repro.data import make_batch
+from repro.models import transformer
+
+SMOKES = [a + "-smoke" for a in ASSIGNED_ARCHS]
+
+
+def _reduced_check(cfg):
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", SMOKES)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_config(arch)
+    _reduced_check(cfg)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    shape = dict(seq_len=128, global_batch=2)
+    batch = make_batch(cfg, shape, key)
+    logits = transformer.forward(params, cfg, batch)
+    assert logits.shape[0] == 2
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/inf in logits"
+
+
+@pytest.mark.parametrize("arch", SMOKES)
+def test_smoke_netes_train_step(arch):
+    """One NetES train step over a 4-agent population on CPU."""
+    from repro.distributed import netes_dist
+    from repro.core import topology
+
+    cfg = get_config(arch)
+    key = jax.random.PRNGKey(1)
+    n_agents = 4
+    ncfg = NetESConfig(alpha=0.01, sigma=0.02, p_broadcast=0.0)
+    step = netes_dist.make_replica_train_step(cfg, ncfg, n_agents,
+                                              agent_axis_names=("data",),
+                                              microbatch=1)
+    params = jax.vmap(lambda k: transformer.init_params(k, cfg))(
+        jax.random.split(key, n_agents))
+    shape = dict(seq_len=64, global_batch=n_agents * 1)
+    batch = make_batch(cfg, shape, key)
+    batch = jax.tree.map(
+        lambda x: x.reshape((n_agents, 1) + x.shape[1:]), batch)
+    adj = jnp.asarray(topology.erdos_renyi(n_agents, p=0.6, seed=0))
+    new_params, metrics = step(params, adj, batch, key)
+    for leaf, new_leaf in zip(jax.tree.leaves(params),
+                              jax.tree.leaves(new_params)):
+        assert leaf.shape == new_leaf.shape
+        assert bool(jnp.isfinite(new_leaf).all()), arch
+    assert np.isfinite(float(metrics["loss_mean"]))
+    # params actually moved
+    moved = max(float(jnp.abs(a - b).max()) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("arch", SMOKES)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch)
+    key = jax.random.PRNGKey(2)
+    params = transformer.init_params(key, cfg)
+    b, max_len = 2, 64
+    cache = transformer.init_cache(cfg, b, max_len, jnp.float32)
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = 0.02 * jax.random.normal(
+            key, cache["enc_out"].shape)
+    token = jnp.ones((b, 1), jnp.int32)
+    logits, cache2 = transformer.decode_step(params, cfg, token, cache,
+                                             jnp.full((b,), 3, jnp.int32))
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    logits2, _ = transformer.decode_step(params, cfg, token, cache2,
+                                         jnp.full((b,), 4, jnp.int32))
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", SMOKES)
+def test_smoke_consensus_train_step(arch):
+    from repro.distributed import netes_dist
+    from repro.core import topology
+
+    cfg = get_config(arch)
+    key = jax.random.PRNGKey(3)
+    n_pop = 4
+    ncfg = NetESConfig(alpha=0.01, sigma=0.02, p_broadcast=0.0)
+    step = netes_dist.make_consensus_train_step(cfg, ncfg, n_pop)
+    params = transformer.init_params(key, cfg)
+    batch = make_batch(cfg, dict(seq_len=64, global_batch=n_pop), key)
+    batch = jax.tree.map(
+        lambda x: x.reshape((n_pop, 1) + x.shape[1:]), batch)
+    adj = jnp.asarray(topology.erdos_renyi(n_pop, p=0.6, seed=1))
+    new_params, metrics = step(params, adj, batch, key)
+    assert np.isfinite(float(metrics["loss_mean"]))
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.isfinite(leaf).all())

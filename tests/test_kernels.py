@@ -1,0 +1,167 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention as fa, mamba_scan as ms,
+                           moe_router as mr, netes_mixing as nm, ref,
+                           rwkv6_wkv as rw)
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# netes_mixing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p_dim", [(8, 64), (16, 700), (32, 1024), (5, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_netes_mixing_sweep(n, p_dim, dtype):
+    adj = (RNG.random((n, n)) < 0.5).astype(np.float32)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 1.0)
+    wt = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    we = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    th = jnp.asarray(RNG.normal(size=(n, p_dim)), dtype)
+    ep = jnp.asarray(RNG.normal(size=(n, p_dim)), dtype)
+    out_k = nm.netes_mixing(jnp.asarray(adj), wt, we, th, ep, sigma=0.1,
+                            tile_p=256)
+    out_r = ref.netes_mixing_ref(jnp.asarray(adj), wt, we, th, ep, sigma=0.1)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (1, 128, 4, 4, 32),      # MHA
+    (2, 257, 4, 2, 64),      # GQA, ragged seq
+    (1, 512, 8, 1, 32),      # MQA
+])
+@pytest.mark.parametrize("mask", ["causal", "window", "chunk", "full"])
+def test_flash_attention_sweep(b, s, h, kv, hd, mask):
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    kw = dict(causal=mask != "full")
+    if mask == "window":
+        kw["window"] = 96
+    if mask == "chunk":
+        kw["chunk"] = 128
+    o_k = fa.flash_attention(q, k, v, block_q=128, block_k=128, **kw)
+    o_r = ref.flash_attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    b, s, h, kv, hd = 1, 256, 4, 2, 64
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), dtype)
+    o_k = fa.flash_attention(q, k, v)
+    o_r = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_matches_model_blockwise_attention():
+    """Kernel vs the model's jnp blockwise path (the dry-run lowering)."""
+    from repro.models.attention import AttnSpec, blockwise_attention
+    b, s, h, kv, hd = 2, 200, 4, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, hd)), jnp.float32)
+    spec = AttnSpec(num_heads=h, num_kv_heads=kv, head_dim=hd,
+                    kind="sliding", window=64)
+    pos = jnp.arange(s)
+    o_m = blockwise_attention(spec, q, k, v, pos, pos, q_block=64, k_block=64)
+    o_k = fa.flash_attention(q, k, v, window=64)
+    np.testing.assert_allclose(np.asarray(o_m), np.asarray(o_k),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d,n", [(1, 32, 64, 8), (2, 64, 300, 16),
+                                     (1, 128, 512, 4)])
+def test_mamba_scan_sweep(b, s, d, n):
+    dec = jnp.asarray(RNG.uniform(0.8, 0.999, (b, s, d, n)), jnp.float32)
+    drv = jnp.asarray(RNG.normal(size=(b, s, d, n)), jnp.float32)
+    h_k = ms.mamba_scan(dec, drv, tile_d=128)
+    h_r = ref.mamba_scan_ref(dec, drv)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mamba_scan_matches_associative_scan():
+    from repro.models.mamba import mamba_scan_ref as assoc
+    b, s, d, n = 2, 64, 32, 8
+    dec = jnp.asarray(RNG.uniform(0.8, 0.999, (b, s, d, n)), jnp.float32)
+    drv = jnp.asarray(RNG.normal(size=(b, s, d, n)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ms.mamba_scan(dec, drv)),
+                               np.asarray(assoc(dec, drv)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,n", [(1, 16, 2, 8), (2, 48, 3, 16),
+                                     (1, 64, 4, 32)])
+def test_rwkv6_wkv_sweep(b, s, h, n):
+    r = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.9, 0.999, (b, s, h, n)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(h, n)), jnp.float32)
+    o_k, s_k = rw.rwkv6_wkv(r, k, v, w, u)
+    o_r, s_r = ref.rwkv6_wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rwkv6_kernel_matches_model_chunked():
+    from repro.models.rwkv6 import wkv6_chunked
+    b, s, h, n = 1, 128, 2, 16
+    r = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, h, n)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.92, 0.999, (b, s, h, n)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(h, n)), jnp.float32)
+    o_k, s_k = rw.rwkv6_wkv(r, k, v, w, u)
+    o_c, s_c = wkv6_chunked(r, k, v, w, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_c),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_c),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe_topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,e,k", [(100, 8, 2), (500, 16, 6), (64, 64, 8),
+                                   (257, 128, 1)])
+def test_moe_topk_sweep(t, e, k):
+    logits = jnp.asarray(RNG.normal(size=(t, e)), jnp.float32)
+    v_k, i_k = mr.moe_topk(logits, k, tile_t=128)
+    v_r, i_r = ref.moe_topk_ref(logits, k)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r),
+                               rtol=1e-5, atol=1e-6)
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))

@@ -1,0 +1,141 @@
+"""NetES algorithm core: Eq.3 reductions, theory bound, learning behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import es_utils, netes, theory, topology
+from repro.envs import make_landscape_reward_fn
+
+
+def _cfg(**kw):
+    base = dict(alpha=0.05, sigma=0.1, p_broadcast=0.0, weight_decay=0.0,
+                fitness_shaping="centered_rank", antithetic=False)
+    base.update(kw)
+    return netes.NetESConfig(**base)
+
+
+def test_eq3_reduces_to_eq1_for_fc_same_init():
+    """Paper §3.1: with a_ij ≡ 1 and equal θ_i, NetES == standard ES."""
+    n, dim = 12, 6
+    key = jax.random.PRNGKey(0)
+    cfg = _cfg()
+    rf = make_landscape_reward_fn("sphere")
+    state = netes.init_state(key, n, dim, same_init=True)
+    adj = jnp.asarray(topology.fully_connected(n))
+    new_state, _ = netes.netes_step(state, adj, rf, cfg)
+    # all agents must remain identical after an FC step from equal init
+    spread = jnp.abs(new_state.thetas - new_state.thetas[0]).max()
+    assert float(spread) < 1e-5
+
+    # and the common update equals the standard-ES update with the same RNG
+    theta_es = state.thetas[0]
+    key2, k_eps, k_eval = jax.random.split(state.key, 4)[:3]
+    eps = jax.random.normal(k_eps, (n, dim), dtype=theta_es.dtype)
+    rewards = rf(state.thetas + cfg.sigma * eps, k_eval)
+    shaped = es_utils.centered_rank(rewards)
+    expected = theta_es + cfg.alpha / (n * cfg.sigma ** 2) * (
+        (shaped[:, None] * (cfg.sigma * eps)).sum(0))
+    np.testing.assert_allclose(np.asarray(new_state.thetas[0]),
+                               np.asarray(expected), rtol=2e-4, atol=2e-5)
+
+
+def test_disconnected_agents_self_update_only():
+    """With A = I, each agent's update uses only its own perturbation.
+
+    Requires raw (unshaped) fitness: centered-rank normalization couples
+    agents globally through the rank ordering even when disconnected."""
+    n, dim = 8, 4
+    cfg = _cfg(fitness_shaping="none")
+    rf = make_landscape_reward_fn("sphere")
+    state = netes.init_state(jax.random.PRNGKey(1), n, dim)
+    adj = jnp.asarray(topology.disconnected(n))
+    new_state, _ = netes.netes_step(state, adj, rf, cfg)
+    # perturbing agent j's start must not affect agent i≠j's result
+    thetas2 = state.thetas.at[3].add(10.0)
+    state2 = state._replace(thetas=thetas2)
+    new2, _ = netes.netes_step(state2, adj, rf, cfg)
+    moved = np.abs(np.asarray(new2.thetas - new_state.thetas)).max(axis=1)
+    assert moved[3] > 1e-3
+    assert np.all(moved[:3] < 1e-6) and np.all(moved[4:] < 1e-6)
+
+
+def test_broadcast_consensus():
+    """p_b = 1 ⇒ every agent adopts the best perturbed parameter."""
+    cfg = _cfg(p_broadcast=1.0)
+    rf = make_landscape_reward_fn("sphere")
+    state = netes.init_state(jax.random.PRNGKey(2), 10, 5)
+    adj = jnp.asarray(topology.erdos_renyi(10, p=0.5, seed=0))
+    new_state, metrics = netes.netes_step(state, adj, rf, cfg)
+    assert float(metrics["broadcast"]) == 1.0
+    spread = jnp.abs(new_state.thetas - new_state.thetas[0]).max()
+    assert float(spread) == 0.0
+
+
+def test_netes_learns_on_sphere():
+    cfg = _cfg(alpha=0.1, p_broadcast=0.2, antithetic=True)
+    rf = make_landscape_reward_fn("sphere")
+    # start far from the optimum so progress dominates the σ noise floor
+    state = netes.init_state(jax.random.PRNGKey(3), 16, 10,
+                             init_fn=lambda k: jax.random.normal(k, (10,)))
+    adj = jnp.asarray(topology.erdos_renyi(16, p=0.5, seed=1))
+    r0 = float(rf(state.thetas, jax.random.PRNGKey(0)).mean())
+    state, metrics = netes.run(state, adj, rf, cfg, 150)
+    first = float(metrics["reward_mean"][:10].mean())
+    last = float(metrics["reward_mean"][-10:].mean())
+    assert last > first, (first, last)
+    assert float(state.best_reward) > r0
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 16), dim=st.integers(2, 8),
+       seed=st.integers(0, 1000),
+       family=st.sampled_from(["erdos_renyi", "small_world", "scale_free",
+                               "fully_connected"]))
+def test_theorem71_upper_bound_holds(n, dim, seed, family):
+    """Numerical check of the paper's Theorem 7.1 inequality with rank-
+    normalized rewards (min R = −max R, as the proof assumes)."""
+    rng = np.random.default_rng(seed)
+    adj = topology.make_topology(family, n, seed=seed) \
+        if family == "fully_connected" else \
+        topology.make_topology(family, n, p=0.5, seed=seed)
+    thetas = rng.normal(size=(n, dim))
+    eps = rng.normal(size=(n, dim))
+    raw = rng.normal(size=(n,))
+    rewards = np.asarray(es_utils.centered_rank(jnp.asarray(raw)))
+    sigma = 0.3
+    lhs = theory.update_variance(adj, thetas, eps, rewards, alpha=1.0,
+                                 sigma=sigma)
+    rhs = theory.variance_upper_bound(adj, thetas, eps, rewards, sigma=sigma)
+    assert lhs <= rhs * (1 + 1e-6)
+
+
+def test_centered_rank_properties():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=37))
+    r = es_utils.centered_rank(x)
+    assert float(r.max()) == 0.5 and float(r.min()) == -0.5
+    assert abs(float(r.sum())) < 1e-4
+    # normalization the Thm 7.1 proof uses: min R = −max R
+    assert np.isclose(float(r.max()), -float(r.min()))
+
+
+def test_antithetic_pair_and_noise_determinism():
+    key = jax.random.PRNGKey(7)
+    k1 = es_utils.agent_noise_key(key, 3, 11)
+    k2 = es_utils.agent_noise_key(key, 3, 11)
+    assert jnp.array_equal(jax.random.key_data(k1), jax.random.key_data(k2))
+    eps = es_utils.sample_noise(k1, (5,))
+    pair = es_utils.antithetic_pair(eps)
+    np.testing.assert_allclose(np.asarray(pair[0]), -np.asarray(pair[1]))
+
+
+def test_es_step_improves_sphere():
+    cfg = _cfg(alpha=0.1, antithetic=True)
+    rf = make_landscape_reward_fn("sphere")
+    theta = 0.5 * jnp.ones((8,))
+    key = jax.random.PRNGKey(0)
+    r0 = float(rf(theta[None], key)[0])
+    for _ in range(40):
+        theta, key, _ = netes.es_step(theta, key, rf, cfg, 32)
+    assert float(rf(theta[None], key)[0]) > r0

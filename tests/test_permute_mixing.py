@@ -1,0 +1,71 @@
+"""Circulant permute-chain mixing: oracle tests on one device + a
+multi-device shard_map equivalence check in a subprocess (8 forced host
+devices — keeping this test session single-device)."""
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.distributed.permute_mixing import (circulant_mixing_ref,
+                                              signed_offsets)
+from repro.kernels import ref as kref
+
+
+def test_signed_offsets():
+    assert signed_offsets([1, 3], 8) == [1, 3, 5, 7]
+    assert signed_offsets([4], 8) == [4]          # self-paired at n/2
+    assert signed_offsets([1], 2) == [1]
+
+
+@pytest.mark.parametrize("n,seed", [(8, 0), (16, 3)])
+def test_circulant_ref_matches_dense_einsum(n, seed):
+    """The offset-walk oracle == dense masked einsum on the same graph."""
+    rng = np.random.default_rng(seed)
+    adj = topology.circulant_erdos_renyi(n, p=0.4, seed=seed)
+    offsets = topology.circulant_offsets(adj)
+    assert offsets is not None
+    r = jnp.asarray(rng.normal(size=n), jnp.float32)
+    thetas = jnp.asarray(rng.normal(size=(n, 33)), jnp.float32)
+    weights = jnp.asarray(adj) * r[None, :]
+    dense = jnp.einsum("ji,id->jd", weights, thetas)
+    walk = circulant_mixing_ref(weights, thetas, offsets)
+    np.testing.assert_allclose(np.asarray(walk), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import topology
+from repro.distributed.permute_mixing import (circulant_mixing_ref,
+                                              make_permute_mixing)
+
+n = 8
+adj = topology.circulant_erdos_renyi(n, p=0.5, seed=1)
+offsets = topology.circulant_offsets(adj)
+rng = np.random.default_rng(0)
+weights = jnp.asarray(adj * rng.normal(size=n)[None, :], jnp.float32)
+thetas = jnp.asarray(rng.normal(size=(n, 24)), jnp.float32)
+mesh = jax.make_mesh((n,), ("data",))
+mix = make_permute_mixing(mesh, "data", offsets)
+with mesh:
+    out = jax.jit(mix)(weights, thetas)
+expect = circulant_mixing_ref(weights, thetas, offsets)
+np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                           rtol=1e-5, atol=1e-5)
+print("PERMUTE_MIXING_OK")
+"""
+
+
+def test_shard_map_permute_chain_multidevice():
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             **{k: v for k, v in __import__("os").environ.items()
+                if k not in ("XLA_FLAGS",)}})
+    assert "PERMUTE_MIXING_OK" in res.stdout, res.stderr[-2000:]

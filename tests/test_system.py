@@ -1,0 +1,209 @@
+"""End-to-end behaviour tests: training loops, serving, checkpointing,
+distributed-step equivalence, HLO cost parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (load_pytree, restore_train_state, save_pytree,
+                              save_train_state)
+from repro.configs import get_config
+from repro.core.netes import NetESConfig
+from repro.train.loop import TrainConfig, train_lm_netes, train_rl_netes
+
+
+def test_rl_training_improves(tmp_path):
+    tc = TrainConfig(n_agents=16, iters=25, topology_family="erdos_renyi",
+                     seed=0, eval_every=8, eval_episodes=4,
+                     netes=NetESConfig(alpha=0.05, sigma=0.1,
+                                       p_broadcast=0.8))
+    hist = train_rl_netes("pendulum", tc)
+    assert hist["max_eval"] is not None
+    assert np.isfinite(hist["max_eval"])
+    # pendulum random policy ≈ −1400…−1700; learning within 25 iters
+    assert hist["max_eval"] > -1300.0
+
+
+def _nano_cfg():
+    import dataclasses
+    return dataclasses.replace(
+        get_config("mistral-nemo-12b-smoke"), name=f"nano-{id(object())}",
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128)
+
+
+def test_lm_es_estimate_aligns_with_gradient():
+    """The meaningful LM-scale correctness check: the antithetic rank-
+    weighted ES estimate points along −∇loss (cosine ≈ √(N/dim) — at toy
+    population sizes the walk dominates actual loss curves, so we assert
+    the estimator, not an N=8 learning curve)."""
+    import dataclasses
+    from repro.core import es_utils
+    from repro.data import make_batch
+    from repro.distributed.netes_dist import _agent_keys, perturb_params
+    from repro.models import transformer
+
+    cfg = _nano_cfg()
+    key = jax.random.PRNGKey(0)
+    n = 48
+    p0 = transformer.init_params(key, cfg)
+    batch = make_batch(cfg, dict(seq_len=64, global_batch=1),
+                       jax.random.fold_in(key, 7))
+    g = jax.grad(lambda p: transformer.loss_fn(p, cfg, batch))(p0)
+    akeys = _agent_keys(jax.random.fold_in(key, 1), n)
+    sigma = 0.02
+    r_pos, r_neg, perts = [], [], []
+    for i in range(n):
+        ak = jax.tree.map(lambda a: a[i], akeys)
+        pert = perturb_params(p0, ak, sigma, +1.0)
+        perts.append(pert)
+        r_pos.append(-transformer.loss_fn(pert, cfg, batch))
+        pert_n = jax.tree.map(lambda t, p: 2.0 * t - p, p0, pert)
+        r_neg.append(-transformer.loss_fn(pert_n, cfg, batch))
+    shaped = es_utils.centered_rank(
+        jnp.concatenate([jnp.stack(r_pos), jnp.stack(r_neg)]))
+    w = shaped[:n] - shaped[n:]
+    est = jax.tree.map(lambda *xs: sum(xs), *[
+        jax.tree.map(lambda p, t, wi=w[i]: wi * (p - t) / sigma,
+                     perts[i], p0) for i in range(n)])
+    fg = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(g)])
+    fe = jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(est)])
+    cos = float(jnp.vdot(fg, fe)
+                / (jnp.linalg.norm(fg) * jnp.linalg.norm(fe)))
+    # est maximizes reward = −loss ⇒ anti-aligned with ∇loss
+    assert cos < -5e-3, cos
+
+
+def test_replica_and_consensus_steps_stable():
+    """Both distributed step flavors stay finite and bounded over steps
+    with production-ish (small α, broadcast-on) settings."""
+    from repro.core import topology
+    from repro.data import make_batch
+    from repro.distributed import netes_dist
+    from repro.models import transformer
+
+    cfg = _nano_cfg()
+    key = jax.random.PRNGKey(0)
+    n = 8
+    ncfg = NetESConfig(alpha=1e-3, sigma=0.01, p_broadcast=0.8,
+                       weight_decay=1e-4)
+    adj = jnp.asarray(topology.erdos_renyi(n, p=0.5, seed=0))
+    batch = make_batch(cfg, dict(seq_len=64, global_batch=n), key)
+    batch_g = jax.tree.map(lambda x: x.reshape((n, 1) + x.shape[1:]), batch)
+
+    rstep = jax.jit(netes_dist.make_replica_train_step(cfg, ncfg, n,
+                                                       microbatch=1))
+    p0 = transformer.init_params(key, cfg)
+    p = jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(),
+                     p0)
+    first = None
+    for it in range(8):
+        p, m = rstep(p, adj, batch_g, jax.random.fold_in(key, it))
+        loss = float(m["loss_mean"])
+        first = first if first is not None else loss
+        assert np.isfinite(loss)
+    assert loss < first + 1.0, (first, loss)
+
+    cstep = jax.jit(netes_dist.make_consensus_train_step(cfg, ncfg, n))
+    pc = p0
+    first = None
+    for it in range(8):
+        pc, m = cstep(pc, adj, batch_g, jax.random.fold_in(key, it))
+        loss = float(m["loss_mean"])
+        first = first if first is not None else loss
+        assert np.isfinite(loss)
+    assert loss < first + 1.0, (first, loss)
+
+
+def test_serve_engine_generates():
+    from repro.serve import ServeEngine
+    from repro.models import transformer
+
+    cfg = get_config("mistral-nemo-12b-smoke")
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    engine = ServeEngine(cfg, params, max_len=32)
+    prompts = jnp.ones((2, 4), jnp.int32)
+    out = engine.generate(prompts, new_tokens=4)
+    assert out.shape == (2, 4)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+    # greedy decode is deterministic
+    out2 = engine.generate(prompts, new_tokens=4)
+    assert np.array_equal(out, out2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones((4,), jnp.int32), {"c": jnp.zeros((2, 2))}]}
+    save_pytree(tmp_path / "t.npz", tree)
+    loaded = load_pytree(tmp_path / "t.npz", tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    save_train_state(tmp_path / "ckpt", 7, tree, extra={"note": "x"})
+    step, restored = restore_train_state(tmp_path / "ckpt", tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"a": jnp.zeros((2, 3))}
+    save_pytree(tmp_path / "t.npz", tree)
+    with pytest.raises(ValueError):
+        load_pytree(tmp_path / "t.npz", {"a": jnp.zeros((3, 2))})
+
+
+def test_hlo_parser_trip_counts():
+    from repro.launch import hlo_parse
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jnp.zeros((64, 128))
+    w = jnp.zeros((128, 128))
+    costs = hlo_parse.hlo_costs(jax.jit(f).lower(x, w).compile().as_text())
+    assert costs["dot_flops"] == 2 * 64 * 128 * 128 * 7
+
+
+def test_optimizers_reduce_quadratic():
+    from repro.optim import adam_init, adam_update, sgd_update
+
+    def loss(p):
+        return jnp.sum((p["w"] - 3.0) ** 2)
+
+    params = {"w": jnp.zeros((5,))}
+    state = adam_init(params)
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state = adam_update(params, grads, state, lr=0.1)
+    assert float(loss(params)) < 1e-2
+
+    params = {"w": jnp.zeros((5,))}
+    mom = None
+    for _ in range(100):
+        grads = jax.grad(loss)(params)
+        params, mom = sgd_update(params, grads, mom, lr=0.05)
+    assert float(loss(params)) < 1e-2
+
+
+def test_synthetic_data_is_learnable_structure():
+    from repro.data import make_batch
+    cfg = get_config("mistral-nemo-12b-smoke")
+    b = make_batch(cfg, dict(seq_len=256, global_batch=4),
+                   jax.random.PRNGKey(0))
+    toks = np.asarray(b["tokens"])
+    assert toks.shape == (4, 256)
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+    # markov structure: repeated-bigram rate far above uniform chance
+    big = set()
+    reps = 0
+    for row in toks:
+        for a, bb in zip(row[:-1], row[1:]):
+            if (a, bb) in big:
+                reps += 1
+            big.add((a, bb))
+    assert reps > 10

@@ -1,0 +1,100 @@
+"""Topology generation invariants (unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+
+FAMILIES = ["erdos_renyi", "scale_free", "small_world", "fully_connected",
+            "circulant_erdos_renyi", "ring", "star"]
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n", [8, 16, 33])
+def test_adjacency_invariants(family, n):
+    adj = topology.make_topology(family, n, seed=3)
+    assert adj.shape == (n, n)
+    assert np.array_equal(adj, adj.T), "paper assumes symmetric A"
+    assert np.all(np.diag(adj) == 1.0), "self-loops required (Eq.1 reduction)"
+    assert set(np.unique(adj)) <= {0.0, 1.0}
+    assert topology.is_connected(adj), "paper: single connected component"
+
+
+def test_disconnected_is_identity():
+    adj = topology.make_topology("disconnected", 12)
+    assert np.array_equal(adj, np.eye(12, dtype=np.float32))
+
+
+def test_fully_connected_is_ones():
+    adj = topology.make_topology("fully_connected", 9)
+    assert np.array_equal(adj, np.ones((9, 9), dtype=np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 40), p=st.floats(0.2, 0.9),
+       seed=st.integers(0, 10_000))
+def test_erdos_renyi_density_tracks_p(n, p, seed):
+    adj = topology.erdos_renyi(n, p=p, seed=seed, connect=False)
+    d = topology.density(adj)
+    # binomial concentration: |d − p| within ~4σ of edge-count std
+    n_edges = n * (n - 1) / 2
+    tol = 4.0 * np.sqrt(p * (1 - p) / n_edges) + 0.02
+    assert abs(d - p) < tol
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 48), seed=st.integers(0, 100))
+def test_seed_determinism(n, seed):
+    a = topology.erdos_renyi(n, p=0.5, seed=seed)
+    b = topology.erdos_renyi(n, p=0.5, seed=seed)
+    assert np.array_equal(a, b)
+
+
+def test_circulant_offsets_roundtrip():
+    adj = topology.circulant_erdos_renyi(24, p=0.4, seed=7)
+    offs = topology.circulant_offsets(adj)
+    assert offs is not None
+    rebuilt = topology.circulant_from_offsets(24, offs)
+    assert np.array_equal(adj, rebuilt)
+    # a general ER graph is (almost surely) not circulant
+    er = topology.erdos_renyi(24, p=0.4, seed=7)
+    assert topology.circulant_offsets(er) is None
+
+
+def test_circulant_same_expected_density_as_er():
+    ns, p = 64, 0.5
+    dens = [topology.density(topology.circulant_erdos_renyi(ns, p=p, seed=s))
+            for s in range(30)]
+    assert abs(np.mean(dens) - p) < 0.08
+
+
+@pytest.mark.parametrize("n,p", [(200, 0.4), (500, 0.5), (500, 0.8)])
+def test_reachability_homogeneity_approximations(n, p):
+    """Paper Fig 4 / Lemma 7.2: closed forms track measured statistics
+    (large-n approximations — the paper evaluates them at n=1000)."""
+    reach = np.mean([topology.reachability(
+        topology.erdos_renyi(n, p=p, seed=s, connect=False))
+        for s in range(3)])
+    hom = np.mean([topology.homogeneity(
+        topology.erdos_renyi(n, p=p, seed=s, connect=False))
+        for s in range(3)])
+    assert abs(reach - topology.reachability_approx(n, p)) / reach < 0.25
+    assert abs(hom - topology.homogeneity_approx(n, p)) < 0.15
+
+
+def test_fully_connected_extremizes_reach_and_homog():
+    """Paper §7: FC minimizes reachability and maximizes homogeneity."""
+    n = 60
+    fc = topology.fully_connected(n)
+    er = topology.erdos_renyi(n, p=0.3, seed=0)
+    assert topology.reachability(fc) < topology.reachability(er)
+    assert topology.homogeneity(fc) >= topology.homogeneity(er)
+    assert topology.homogeneity(fc) == 1.0
+
+
+def test_sparser_er_has_higher_reachability():
+    """Paper Fig 5 premise: lower density ⇒ higher reachability."""
+    n = 100
+    r = [np.mean([topology.reachability(topology.erdos_renyi(n, p=p, seed=s))
+                  for s in range(3)]) for p in (0.2, 0.5, 0.9)]
+    assert r[0] > r[1] > r[2]
