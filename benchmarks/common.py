@@ -18,6 +18,7 @@ from typing import Dict, Iterable, List, Optional
 import numpy as np
 
 from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
 from repro.train.loop import TrainConfig, train_rl_netes
 
 RESULTS_DIR = pathlib.Path("experiments/paper")
@@ -26,10 +27,12 @@ RESULTS_DIR = pathlib.Path("experiments/paper")
 def run_one(task: str, family: str, n_agents: int, iters: int, seed: int,
             density: float = 0.5, p_broadcast: float = 0.8,
             alpha: float = 0.05, sigma: float = 0.1,
-            same_init: bool = False) -> Dict:
+            same_init: bool = False, representation: str = "auto") -> Dict:
     tc = TrainConfig(
-        n_agents=n_agents, iters=iters, topology_family=family,
-        density=density, topo_seed=seed, seed=seed,
+        n_agents=n_agents, iters=iters,
+        topology=TopologySpec(family=family, n_agents=n_agents, p=density,
+                              seed=seed),
+        representation=representation, seed=seed,
         eval_every=max(1, iters // 8), eval_episodes=8,
         netes=NetESConfig(alpha=alpha, sigma=sigma,
                           p_broadcast=p_broadcast))

@@ -1,9 +1,13 @@
 """Core: the paper's contribution — topologies + NetES update rule + theory."""
-from . import es_utils, netes, theory, topology
+from . import es_utils, netes, theory, topology, topology_repr
 from .netes import NetESConfig, NetESState, init_state, netes_step, run
 from .topology import TopologySpec, make_topology
+from .topology_repr import Topology, from_dense, from_spec, \
+    select_representation
 
 __all__ = [
-    "es_utils", "netes", "theory", "topology", "NetESConfig", "NetESState",
-    "init_state", "netes_step", "run", "TopologySpec", "make_topology",
+    "es_utils", "netes", "theory", "topology", "topology_repr",
+    "NetESConfig", "NetESState", "init_state", "netes_step", "run",
+    "TopologySpec", "make_topology", "Topology", "from_dense", "from_spec",
+    "select_representation",
 ]

@@ -27,7 +27,8 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import es_utils
+from . import es_utils, topology_repr
+from .topology_repr import Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,21 +89,28 @@ def shape_fitness(returns: jax.Array, kind: str) -> jax.Array:
     raise ValueError(f"unknown fitness shaping {kind!r}")
 
 
-def mixing_update(adj: jax.Array, thetas: jax.Array, perturbed: jax.Array,
+def mixing_update(adj, thetas: jax.Array, perturbed: jax.Array,
                   shaped: jax.Array, cfg: NetESConfig) -> jax.Array:
-    """Eq. 3 as a dense contraction over the population.
+    """Eq. 3, dispatched on the topology's physical representation.
 
     u_j = scale_j · Σ_i a_ji R̃_i (perturbed_i − θ_j)
-        = scale_j · ( (A·diag(R̃))ⱼ: @ perturbed  −  (Σ_i a_ji R̃_i) θ_j )
+        = scale_j · ( Σ_i a_ji R̃_i perturbed_i  −  (Σ_i a_ji R̃_i) θ_j )
 
-    Cost O(N²·D) — the framework hot spot fused by kernels/netes_mixing.
+    ``adj`` may be a raw (N, N) array (legacy call sites — treated as the
+    dense representation) or a ``topology_repr.Topology``, in which case
+    the contraction runs O(N²·D) dense, O(N·K·D) neighbor-gather, or
+    O(N·|Δ|·D) roll-chain depending on ``topo.kind`` (DESIGN.md §3). All
+    three paths are parity-tested against each other in
+    tests/test_topology_repr.py. The dense hot loop is fused by
+    kernels/netes_mixing; the sparse one by kernels/netes_sparse_mixing.
     """
+    topo = topology_repr.as_topology(adj)
     n = thetas.shape[0]
-    w = adj * shaped[None, :]                     # w[j, i] = a_ji R̃_i
-    wsum = w.sum(axis=1, keepdims=True)           # (N, 1)
-    mixed = w @ perturbed - wsum * thetas         # (N, D)
+    mixed = topology_repr.weighted_neighbor_sum(topo, shaped, perturbed)
+    wsum = topology_repr.weighted_row_sum(topo, shaped)[:, None]
+    mixed = mixed - wsum * thetas                 # (N, D)
     if cfg.normalization == "degree":
-        scale = cfg.alpha / (adj.sum(axis=1, keepdims=True) * cfg.sigma ** 2)
+        scale = cfg.alpha / (topo.deg[:, None] * cfg.sigma ** 2)
     else:
         scale = cfg.alpha / (n * cfg.sigma ** 2)
     return scale * mixed
@@ -130,12 +138,17 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
         raw = jnp.concatenate([r_pos, r_neg])
         shaped_all = shape_fitness(raw, cfg.fitness_shaping)
         shaped = shaped_all[:n] - shaped_all[n:]          # antithetic diff
-        rewards = r_pos                                    # raw, for broadcast/eval
+        # broadcast/eval track the FULL population: both ±ε halves compete
+        # for argmax (the −ε half is half the samples; dropping it biased
+        # best_theta/best_reward toward +ε draws).
+        rewards = raw
+        candidates = jnp.concatenate([pert_pos, pert_neg])
         perturbed = pert_pos
     else:
         perturbed = state.thetas + cfg.sigma * eps
         rewards = reward_fn(perturbed, k_eval)
         shaped = shape_fitness(rewards, cfg.fitness_shaping)
+        candidates = perturbed
 
     update = mixing_update(adj, state.thetas, perturbed, shaped, cfg)
     update = es_utils.apply_weight_decay(state.thetas, update, cfg.weight_decay)
@@ -143,7 +156,7 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
 
     # ---- broadcast event (exploit) ----
     best_idx = jnp.argmax(rewards)
-    iter_best_theta = perturbed[best_idx]
+    iter_best_theta = candidates[best_idx]
     iter_best_reward = rewards[best_idx]
     beta = jax.random.uniform(k_beta)
     do_broadcast = beta < cfg.p_broadcast
@@ -198,7 +211,7 @@ def es_step(theta: jax.Array, key: jax.Array, reward_fn: Callable,
         raw = jnp.concatenate([r_pos, r_neg])
         shaped_all = shape_fitness(raw, cfg.fitness_shaping)
         shaped = shaped_all[:n_agents] - shaped_all[n_agents:]
-        rewards = r_pos
+        rewards = raw   # metrics over BOTH ±ε halves (same as netes_step)
     else:
         rewards = reward_fn(theta[None] + cfg.sigma * eps, k_eval)
         shaped = shape_fitness(rewards, cfg.fitness_shaping)

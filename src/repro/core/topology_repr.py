@@ -1,0 +1,318 @@
+"""First-class topology representations for the NetES mixing update.
+
+The paper's headline result (1000 Erdos-Renyi agents matching 3000
+fully-connected ones) lives in the sparse-density regime p ≪ 1, yet a raw
+``(N, N)`` float32 adjacency pays the dense O(N²·D) contraction no matter
+how empty it is. This module makes the *physical representation* of a
+topology a first-class, dispatchable choice (DESIGN.md §3):
+
+``dense``
+    The seed behavior: the adjacency as an ``(N, N)`` float32 matrix; the
+    mixing update is two masked matmuls. Optimal for high density (MXU /
+    BLAS efficiency) and the only representation every graph admits.
+
+``sparse``
+    Padded neighbor-list (ELL/CSR-with-pad): ``neighbor_idx (N, K_max)``
+    int32 + ``neighbor_mask (N, K_max)`` float32, built host-side from the
+    generators. The mixing update becomes a gather + masked weighted-sum
+    at O(N·K·D) flops and — in the distributed setting — K·D neighbor
+    bytes instead of the N·D all-gather (the Chen et al. 2018 binding
+    constraint).
+
+``circulant``
+    Offset list for vertex-transitive ring graphs
+    (``topology.circulant_offsets``): the mixing update is a chain of
+    rolls (single host) or ``lax.ppermute``s (distributed,
+    ``distributed/permute_mixing.py``), moving exactly p·N·D bytes.
+
+``Topology`` is a registered JAX pytree: array leaves (adjacency /
+neighbor lists / degrees) trace through ``jit`` and ``lax.scan`` while the
+representation kind and offsets stay static, so every consumer
+(``core.netes.mixing_update``, the distributed step builders, the Pallas
+kernels) can dispatch on ``topo.kind`` at trace time with zero runtime
+branching.
+
+Representation selection (``select_representation``) is a host-side
+heuristic over the *structure* of the graph; builders are pure
+numpy — topology construction happens once at launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import topology as topo_gen
+
+Array = jax.Array
+
+# Density at or below which the neighbor-list representation is preferred
+# over dense. The flop ratio is N/K ≈ 1/(2p−p²); the measured CPU crossover
+# (benchmarks/kernel_bench.py sparse_crossover) and the distributed
+# communication model both favor sparse well below this cutoff, while at
+# p ≳ 0.3 the padded K_max approaches N and sparse is strictly worse.
+SPARSE_DENSITY_CUTOFF = 0.25
+
+# A circulant offset chain costs one ppermute per signed offset; past this
+# fraction of the ring the chain stops beating one optimized all-gather.
+CIRCULANT_OFFSET_CUTOFF = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A communication topology with an explicit physical representation.
+
+    Exactly one representation's payload is populated:
+
+    * dense:      ``adj (N, N)`` float32
+    * sparse:     ``neighbor_idx (N, K_max)`` int32,
+                  ``neighbor_mask (N, K_max)`` float32 — the edge WEIGHT
+                  ``a_ji`` (1.0 on the generators' binary graphs), 0 on
+                  padding; padded slots index row ``j`` itself so gathers
+                  stay in bounds
+    * circulant:  ``offsets`` — generator offsets d ∈ [1, n//2]; the edge
+                  set is ∪_d {(i, i±d mod n)} plus self-loops.
+
+    ``deg (N,)`` float32 (row degrees, self-loop included) is always
+    present — the ``normalization="degree"`` variant of Eq. 3 needs it
+    regardless of representation.
+    """
+
+    kind: str                                   # dense | sparse | circulant
+    n: int
+    deg: Array
+    adj: Optional[Array] = None                 # (N, N)      [dense]
+    neighbor_idx: Optional[Array] = None        # (N, K_max)  [sparse]
+    neighbor_mask: Optional[Array] = None       # (N, K_max)  [sparse]
+    offsets: Optional[Tuple[int, ...]] = None   # [circulant]
+
+    # -- pytree protocol (kind/n/offsets static, arrays traced) ----------
+    def tree_flatten(self):
+        children = (self.deg, self.adj, self.neighbor_idx,
+                    self.neighbor_mask)
+        aux = (self.kind, self.n, self.offsets)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        deg, adj, idx, mask = children
+        kind, n, offsets = aux
+        return cls(kind=kind, n=n, deg=deg, adj=adj, neighbor_idx=idx,
+                   neighbor_mask=mask, offsets=offsets)
+
+    @property
+    def k_max(self) -> int:
+        return 0 if self.neighbor_idx is None else self.neighbor_idx.shape[1]
+
+    def to_dense(self) -> Array:
+        """Materialize the (N, N) float32 adjacency (host/trace-side)."""
+        if self.kind == "dense":
+            return self.adj
+        if self.kind == "circulant":
+            return jnp.asarray(
+                topo_gen.circulant_from_offsets(self.n, list(self.offsets)))
+        # sparse: scatter the edge weights through the neighbor list.
+        # scatter-add is exact: each (j, i) edge appears once per row, and
+        # padded slots contribute weight 0 at (j, j).
+        n, k = self.neighbor_idx.shape
+        rows = jnp.repeat(jnp.arange(n), k)
+        cols = self.neighbor_idx.reshape(-1)
+        vals = self.neighbor_mask.reshape(-1)
+        return jnp.zeros((n, n), jnp.float32).at[rows, cols].add(vals)
+
+
+jax.tree_util.register_pytree_node(
+    Topology, Topology.tree_flatten, Topology.tree_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# host-side builders
+# ---------------------------------------------------------------------------
+
+def sparse_neighbors(adj: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Padded neighbor-list from a dense adjacency (host-side numpy).
+
+    Returns ``(neighbor_idx (N, K_max) int32, neighbor_mask (N, K_max)
+    float32)``. ``neighbor_mask`` carries the actual edge WEIGHT
+    ``adj[j, i]`` (1.0 for the binary graphs the generators emit), so
+    weighted adjacencies survive the representation; padded slots index
+    the row itself (in-bounds gathers) with weight 0.
+    """
+    adj = np.asarray(adj)
+    n = adj.shape[0]
+    degs = (adj != 0).sum(axis=1)
+    k_max = max(int(degs.max()), 1)
+    idx = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, k_max))
+    mask = np.zeros((n, k_max), np.float32)
+    for j in range(n):
+        nbrs = np.nonzero(adj[j] != 0)[0]
+        idx[j, :len(nbrs)] = nbrs
+        mask[j, :len(nbrs)] = adj[j, nbrs]
+    return idx, mask
+
+
+def _exact_circulant_offsets(adj: np.ndarray):
+    """Offsets iff the graph is EXACTLY the symmetric, self-looped
+    circulant they generate. ``topo_gen.circulant_offsets`` only checks
+    row-rotation structure, which also matches directed or zero-diagonal
+    rings — graphs the roll-chain backend (unconditional self term, both
+    ±d offsets, unit weights) would silently symmetrize and self-loop."""
+    offs = topo_gen.circulant_offsets(adj)
+    if offs is None:
+        return None
+    rebuilt = topo_gen.circulant_from_offsets(adj.shape[0], offs)
+    return offs if np.array_equal(np.asarray(adj, np.float32),
+                                  rebuilt) else None
+
+
+def select_representation(adj: np.ndarray) -> str:
+    """Pick the cheapest representation a graph admits (DESIGN.md §3).
+
+    1. circulant — the graph is exactly a symmetric self-looped circulant
+       with a small enough offset set that the ppermute chain beats one
+       all-gather;
+    2. sparse — max degree ≤ ``SPARSE_DENSITY_CUTOFF``·N, so the padded
+       gather does ≪ the dense contraction's work;
+    3. dense — everything else (the always-correct fallback).
+    """
+    adj = np.asarray(adj)
+    n = adj.shape[0]
+    offs = _exact_circulant_offsets(adj)
+    if offs is not None and n > 2:
+        signed = len(offs) * 2 - (1 if n % 2 == 0 and (n // 2) in offs
+                                  else 0)
+        if signed <= CIRCULANT_OFFSET_CUTOFF * n:
+            return "circulant"
+    k_max = int((adj != 0).sum(axis=1).max())
+    if k_max <= SPARSE_DENSITY_CUTOFF * n:
+        return "sparse"
+    return "dense"
+
+
+def from_dense(adj, representation: str = "auto") -> Topology:
+    """Build a ``Topology`` from a dense adjacency (host-side).
+
+    ``representation`` ∈ {auto, dense, sparse, circulant}. ``auto`` runs
+    ``select_representation``; asking for ``circulant`` on a non-circulant
+    graph raises.
+    """
+    adj_np = np.asarray(adj, dtype=np.float32)
+    n = adj_np.shape[0]
+    deg = jnp.asarray(adj_np.sum(axis=1))
+    if representation == "auto":
+        representation = select_representation(adj_np)
+    if representation == "dense":
+        return Topology(kind="dense", n=n, deg=deg, adj=jnp.asarray(adj_np))
+    if representation == "sparse":
+        idx, mask = sparse_neighbors(adj_np)
+        return Topology(kind="sparse", n=n, deg=deg,
+                        neighbor_idx=jnp.asarray(idx),
+                        neighbor_mask=jnp.asarray(mask))
+    if representation == "circulant":
+        offs = _exact_circulant_offsets(adj_np)
+        if offs is None:
+            raise ValueError(
+                "adjacency is not a symmetric self-looped circulant")
+        return Topology(kind="circulant", n=n, deg=deg,
+                        offsets=tuple(offs))
+    raise ValueError(f"unknown representation {representation!r}")
+
+
+def from_spec(spec: "topo_gen.TopologySpec",
+              representation: str = "auto") -> Topology:
+    """TopologySpec → generated graph → representation-selected Topology."""
+    return from_dense(spec.build(), representation=representation)
+
+
+def as_topology(t: Union[Topology, Array, np.ndarray]) -> Topology:
+    """Coerce raw adjacency arrays to a dense ``Topology`` (backwards
+    compatibility: every legacy call site passes an (N, N) array)."""
+    if isinstance(t, Topology):
+        return t
+    arr = jnp.asarray(t)
+    return Topology(kind="dense", n=arr.shape[0], deg=arr.sum(axis=1),
+                    adj=arr)
+
+
+# ---------------------------------------------------------------------------
+# signed-offset helper (shared with distributed/permute_mixing)
+# ---------------------------------------------------------------------------
+
+def signed_offsets(offsets: Sequence[int], n: int):
+    """±Δ as distinct nonzero shifts mod n (offset n/2 is self-paired)."""
+    out = []
+    for d in offsets:
+        out.append(d % n)
+        if (-d) % n != d % n:
+            out.append((-d) % n)
+    return sorted(set(out) - {0})
+
+
+# ---------------------------------------------------------------------------
+# representation-dispatched primitives (jittable)
+# ---------------------------------------------------------------------------
+
+def weighted_neighbor_sum(topo: Topology, coeff: Array,
+                          values: Array) -> Array:
+    """``out_j = Σ_i a_ji · coeff_i · values_i`` — the Eq. 3 contraction.
+
+    ``coeff (N,)``, ``values (N, ...)`` → ``(N, ...)``. Dispatches on the
+    physical representation at trace time:
+
+    * dense:     one masked matmul — O(N²·D)
+    * sparse:    K_max-step neighbor gather-accumulate — O(N·K·D)
+    * circulant: |±Δ|+1 fused rolls of ``coeff ⊙ values`` — O(N·|Δ|·D)
+    """
+    # Weights are formed in the coeff dtype (f32 for rank-shaped rewards)
+    # and cast to the values dtype BEFORE the contraction — bit-identical
+    # to the legacy `(adj * R̃).astype(leaf.dtype)` einsum in
+    # distributed/netes_dist.py, so parity tests cover both call sites.
+    if topo.kind == "dense":
+        w = (topo.adj * coeff[None, :]).astype(values.dtype)
+        return jnp.einsum("ji,i...->j...", w, values)
+    if topo.kind == "circulant":
+        c = coeff.astype(values.dtype)
+        src = c.reshape((-1,) + (1,) * (values.ndim - 1)) * values
+        acc = src  # d = 0 (self-loop)
+        for d in signed_offsets(topo.offsets, topo.n):
+            acc = acc + jnp.roll(src, -d, axis=0)
+        return acc
+    # sparse: loop over neighbor slots; each step is one row-gather + fma,
+    # keeping transients at one (N, ...) slab (vs (N, K, ...) for a single
+    # big gather). Unrolled ×4 so XLA fuses gather+fma chains.
+    idx, mask = topo.neighbor_idx, topo.neighbor_mask
+    k_max = idx.shape[1]
+    wnb = (mask * jnp.take(coeff, idx)).astype(values.dtype)    # (N, K)
+
+    def one(c, acc):
+        col = idx[:, c]
+        w = wnb[:, c].reshape((-1,) + (1,) * (values.ndim - 1))
+        return acc + w * jnp.take(values, col, axis=0)
+
+    acc = jnp.zeros_like(values)
+    k4 = k_max - k_max % 4
+    if k4:
+        def body(kk, a):
+            for u in range(4):
+                a = one(kk * 4 + u, a)
+            return a
+        acc = jax.lax.fori_loop(0, k4 // 4, body, acc)
+    for c in range(k4, k_max):
+        acc = one(c, acc)
+    return acc
+
+
+def weighted_row_sum(topo: Topology, coeff: Array) -> Array:
+    """``Σ_i a_ji · coeff_i`` per row j — the self-correction weight."""
+    if topo.kind == "dense":
+        return (topo.adj * coeff[None, :]).sum(axis=1)
+    if topo.kind == "circulant":
+        acc = coeff
+        for d in signed_offsets(topo.offsets, topo.n):
+            acc = acc + jnp.roll(coeff, -d)
+        return acc
+    return (topo.neighbor_mask
+            * jnp.take(coeff, topo.neighbor_idx)).sum(axis=1)

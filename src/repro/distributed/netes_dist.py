@@ -28,14 +28,15 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import es_utils
+from repro.core import es_utils, topology_repr
 from repro.core.netes import NetESConfig
+from repro.core.topology_repr import Topology
 from repro.models import transformer
 
 
@@ -101,7 +102,8 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                             n_agents: int,
                             agent_axis_names: Tuple[str, ...] = ("data",),
                             mixing: str = "seed_replay",
-                            microbatch: int = 4) -> Callable:
+                            microbatch: int = 4,
+                            topology: Optional[Topology] = None) -> Callable:
     """Returns step(params, adj, batch, key) -> (params', metrics).
 
     params: pytree with leading agent axis N on every leaf.
@@ -109,6 +111,13 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
     ``agent_axis_names`` feeds ``vmap(..., spmd_axis_name=...)`` so that
     activation sharding constraints inside the per-agent forward compose
     with the agent axis.
+
+    ``topology`` (optional): a ``core.topology_repr.Topology``. When given,
+    the θ-mixing contractions dispatch on its physical representation
+    (dense einsum / neighbor gather / circulant roll-chain — DESIGN.md §3)
+    and the runtime ``adj`` argument is ignored (the step closes over the
+    topology's arrays). When None, the legacy dense behavior over the
+    runtime ``adj`` is preserved bit-for-bit.
 
     ``mixing`` selects the ε-mixing wire format:
       * "gather" (baseline): ε is regenerated per-agent (sharded, no
@@ -123,6 +132,15 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
     sigma, alpha = ncfg.sigma, ncfg.alpha
     spmd = (agent_axis_names if len(agent_axis_names) > 1
             else agent_axis_names[0])
+    # Dense view of a non-dense topology, materialized ONCE at build time:
+    # the seed-replay ε-scan consumes per-SOURCE weight columns (already a
+    # local O(N) slice per scan step — no dense contraction), so it reads
+    # this rather than re-deriving columns from the neighbor list. The
+    # "gather" wire format regenerates ε through the representation
+    # dispatch instead and never touches a dense adjacency — don't pay
+    # the O(N²) materialization there.
+    topo_adj = (None if topology is None or mixing == "gather"
+                else topology.to_dense())
 
     def eval_loss(theta, abatch):
         """Mean loss over the agent's batch, scanned in microbatches so
@@ -156,12 +174,23 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
 
         shaped = es_utils.centered_rank(jnp.concatenate([r_pos, r_neg]))
         s_pos, s_neg = shaped[:n_agents], shaped[n_agents:]
-        w_theta = adj * (s_pos + s_neg)[None, :]         # (j, i)
-        w_eps = adj * (s_pos - s_neg)[None, :]
-        wt_sum = w_theta.sum(axis=1)                     # (N,)
+        s_theta = s_pos + s_neg                  # per-source θ-mix weight
+        s_eps = s_pos - s_neg                    # per-source ε-mix weight
+        topo = (topology if topology is not None
+                else topology_repr.as_topology(adj))
+        if mixing != "gather":                   # ε-scan columns (j, i)
+            adj_d = adj if topo_adj is None else topo_adj
+            w_eps = adj_d * s_eps[None, :]
+        wt_sum = topology_repr.weighted_row_sum(topo, s_theta)   # (N,)
         scale = alpha / (n_agents * sigma ** 2)
 
-        best = jnp.argmax(r_pos)
+        # broadcast candidate: argmax over BOTH ±ε halves (same fix as
+        # core netes_step — the −ε half is half the population) with the
+        # winning sign threaded into the σ·ε term of best_pert.
+        raw = jnp.concatenate([r_pos, r_neg])
+        best_flat = jnp.argmax(raw)
+        best = best_flat % n_agents
+        best_sign = jnp.where(best_flat < n_agents, 1.0, -1.0)
         onehot_best = jax.nn.one_hot(best, n_agents, dtype=jnp.float32)
         do_bcast = jax.random.uniform(k_beta) < ncfg.p_broadcast
 
@@ -171,26 +200,31 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         for i, leaf in enumerate(leaves):
             if mixing == "gather":
                 # ε regenerated per agent (sharded with θ — zero bytes at
-                # generation); θ and ε enter the mixing einsums, which XLA
-                # lowers to ONE all-gather over the agent axes each (the
-                # topology communication) + local matmul.
+                # generation); θ and ε enter the representation-dispatched
+                # contraction: dense → ONE all-gather over the agent axes
+                # each + local matmul; sparse/circulant → the cheaper
+                # backends of topology_repr.weighted_neighbor_sum.
                 lkeys = jax.vmap(lambda ak, lidx=i:
                                  jax.random.fold_in(ak, lidx))(akeys)
                 eps = jax.vmap(lambda k, sh=leaf.shape[1:], dt=leaf.dtype:
                                jax.random.normal(k, sh, dt))(lkeys)
-                wdt = w_theta.astype(leaf.dtype)
-                wed = w_eps.astype(leaf.dtype)
-                mixed = (jnp.einsum("ji,i...->j...", wdt, leaf)
-                         + sigma * jnp.einsum("ji,i...->j...", wed, eps))
-                best_pert = jnp.einsum("i,i...->...",
-                                       onehot_dt.astype(leaf.dtype),
-                                       leaf + sigma * eps)
+                mixed = (topology_repr.weighted_neighbor_sum(
+                             topo, s_theta, leaf)
+                         + sigma * topology_repr.weighted_neighbor_sum(
+                             topo, s_eps, eps))
+                best_pert = (jnp.einsum("i,i...->...",
+                                        onehot_dt.astype(leaf.dtype), leaf)
+                             + best_sign.astype(leaf.dtype) * sigma
+                             * jnp.einsum("i,i...->...",
+                                          onehot_dt.astype(leaf.dtype),
+                                          eps))
             elif leaf.ndim - 1 < 3:  # seed_replay, small/flat leaves
-                # θ still mixes via the all-gather einsum (that IS the
-                # topology's parameter traffic); ε is regenerated locally
-                # per neighbor inside a scan — zero ε collective bytes.
-                wdt = w_theta.astype(leaf.dtype)
-                mixed_theta = jnp.einsum("ji,i...->j...", wdt, leaf)
+                # θ still mixes via the representation dispatch (dense:
+                # the all-gather einsum — that IS the topology's parameter
+                # traffic); ε is regenerated locally per neighbor inside a
+                # scan — zero ε collective bytes.
+                mixed_theta = topology_repr.weighted_neighbor_sum(
+                    topo, s_theta, leaf)
 
                 def eps_body(carry, inp, sh=leaf.shape[1:], dt=leaf.dtype,
                              lidx=i):
@@ -210,7 +244,8 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                 mixed = mixed_theta + sigma * mixed_eps
                 best_pert = (jnp.einsum("i,i...->...",
                                         onehot_dt.astype(leaf.dtype), leaf)
-                             + sigma * best_eps)
+                             + best_sign.astype(leaf.dtype) * sigma
+                             * best_eps)
             else:
                 # seed_replay, stacked leaves (N, R, rest…): outer scan over
                 # the stack dim R bounds every transient (gathered θ slice,
@@ -223,8 +258,8 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                            lidx=i):
                     leaf_r = jax.lax.dynamic_index_in_dim(
                         lf, r_idx, axis=1, keepdims=False)   # (N, rest)
-                    wdt = w_theta.astype(dt)
-                    mixed_theta = jnp.einsum("ji,i...->j...", wdt, leaf_r)
+                    mixed_theta = topology_repr.weighted_neighbor_sum(
+                        topo, s_theta, leaf_r)
 
                     def eps_body(carry, inp):
                         mix_acc, best_acc = carry
@@ -245,7 +280,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                     mixed_r = mixed_theta + sigma * mixed_eps
                     best_r = (jnp.einsum("i,i...->...",
                                          onehot_dt.astype(dt), leaf_r)
-                              + sigma * best_eps)
+                              + best_sign.astype(dt) * sigma * best_eps)
                     return None, (mixed_r, best_r)
 
                 _, (mixed_s, best_s) = jax.lax.scan(
@@ -266,9 +301,9 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         new_params = jax.tree.unflatten(treedef, new_leaves)
 
         metrics = {
-            "reward_mean": r_pos.mean(),
-            "reward_max": r_pos.max(),
-            "loss_mean": -r_pos.mean(),
+            "reward_mean": raw.mean(),
+            "reward_max": raw.max(),
+            "loss_mean": -raw.mean(),
             "broadcast": do_bcast.astype(jnp.float32),
         }
         return new_params, metrics
@@ -281,13 +316,18 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
 # ---------------------------------------------------------------------------
 
 def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
-                              n_pop: int) -> Callable:
+                              n_pop: int,
+                              topology: Optional[Topology] = None) -> Callable:
     """Returns step(params, adj, batch, key) -> (params', metrics).
 
     params: ONE shared tree (no agent axis). batch leaves:
     (n_pop, microbatch, ...) — member i is evaluated on microbatch i.
+    The topology enters only through per-agent degree weights (DESIGN.md
+    §7.4); with a ``Topology`` given, degrees come from the representation
+    (``topo.deg``) and the runtime ``adj`` argument is ignored.
     """
     sigma, alpha = ncfg.sigma, ncfg.alpha
+    topo_deg = None if topology is None else topology.deg
 
     def step(params, adj, batch, key):
         k_agents, k_beta = jax.random.split(key)
@@ -303,12 +343,16 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
 
         _, (r_pos, r_neg) = jax.lax.scan(eval_member, None, (akeys, batch))
 
-        shaped = es_utils.centered_rank(jnp.concatenate([r_pos, r_neg]))
+        raw = jnp.concatenate([r_pos, r_neg])
+        shaped = es_utils.centered_rank(raw)
         w_eps = shaped[:n_pop] - shaped[n_pop:]          # (P,)
-        degree = adj.sum(axis=0) / n_pop                 # topology weighting
+        degree = (adj.sum(axis=0) if topo_deg is None
+                  else topo_deg) / n_pop                 # topology weighting
         coeff = w_eps * degree                           # (P,)
-        best = jnp.argmax(r_pos)
-        onehot_best = jax.nn.one_hot(best, n_pop, dtype=jnp.float32)
+        # broadcast candidate over BOTH ±ε halves (same fix as netes_step)
+        best_flat = jnp.argmax(raw)
+        best = best_flat % n_pop
+        best_sign = jnp.where(best_flat < n_pop, 1.0, -1.0)
         do_bcast = jax.random.uniform(k_beta) < ncfg.p_broadcast
         scale = alpha / (n_pop * sigma)
 
@@ -326,18 +370,24 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         new_params = jax.tree.map(
             lambda t, u: t + scale * u - ncfg.weight_decay * t, params, upd)
         # broadcast/exploit: jump to the best member's perturbation —
-        # regenerated from the best member's key (seed replay) instead of
-        # carrying a second full-tree accumulator through the scan.
+        # regenerated from the best member's key (seed replay, with the
+        # winning ±ε sign) instead of carrying a second full-tree
+        # accumulator through the scan.
         best_key = jax.tree.map(lambda a: a[best], akeys)
-        best_pert = perturb_params(params, best_key, sigma, +1.0)
+        best_pos = perturb_params(params, best_key, sigma, +1.0)
+        # −ε winner via the mirror identity θ − σε = 2θ − (θ + σε), keeping
+        # leaf dtypes intact (a traced sign would promote bf16 leaves)
+        best_pert = jax.tree.map(
+            lambda t, p: jnp.where(best_sign > 0, p, 2.0 * t - p),
+            params, best_pos)
         new_params = jax.tree.map(
             lambda n, bp: jnp.where(do_bcast, bp, n),
             new_params, best_pert)
 
         metrics = {
-            "reward_mean": r_pos.mean(),
-            "reward_max": r_pos.max(),
-            "loss_mean": -r_pos.mean(),
+            "reward_mean": raw.mean(),
+            "reward_max": raw.max(),
+            "loss_mean": -raw.mean(),
             "broadcast": do_bcast.astype(jnp.float32),
         }
         return new_params, metrics

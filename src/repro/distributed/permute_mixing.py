@@ -28,15 +28,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-
-def signed_offsets(offsets: Sequence[int], n: int):
-    """±Δ as distinct nonzero shifts mod n (offset n/2 is self-paired)."""
-    out = []
-    for d in offsets:
-        out.append(d % n)
-        if (-d) % n != d % n:
-            out.append((-d) % n)
-    return sorted(set(out) - {0})
+from repro.core.topology_repr import Topology, signed_offsets  # noqa: F401
+# signed_offsets moved to core.topology_repr (the circulant representation
+# owns its offset algebra); re-exported here for existing importers.
 
 
 def circulant_mixing_ref(weights: jax.Array, thetas: jax.Array,
@@ -83,3 +77,60 @@ def make_permute_mixing(mesh: Mesh, axis: str, offsets: Sequence[int]):
         in_specs=(P(None, None), P(axis, None)),
         out_specs=P(axis, None))
     return mixed
+
+
+# ---------------------------------------------------------------------------
+# representation dispatch (DESIGN.md §3): one mixing signature, three wire
+# formats. mix(weights (N, N), thetas (N, D)) -> (N, D), agent-sharded.
+# ---------------------------------------------------------------------------
+
+def make_allgather_mixing(mesh: Mesh, axis: str):
+    """Dense backend: one tiled all-gather of θ (N·D bytes) + local
+    row-contraction — what the einsum in ``netes_dist`` lowers to, made
+    explicit so the dispatch has a uniform shard_map shape."""
+
+    def local_mix(weights, theta):
+        j = jax.lax.axis_index(axis)
+        full = jax.lax.all_gather(theta, axis, axis=0, tiled=True)  # (N, D)
+        return (weights[j] @ full)[None]
+
+    return shard_map(local_mix, mesh=mesh,
+                     in_specs=(P(None, None), P(axis, None)),
+                     out_specs=P(axis, None))
+
+
+def make_sparse_gather_mixing(mesh: Mesh, axis: str, topo: Topology):
+    """Sparse backend: all-gather θ, then contract ONLY the K_max listed
+    neighbors — O(K·D) local flops instead of O(N·D).
+
+    The collective is still the dense all-gather (an arbitrary neighbor
+    set has no static ppermute schedule); the win over the dense backend
+    is the local compute + the O(N·K) weight footprint. A
+    neighborhood-routed exchange (per-edge ppermutes batched by offset)
+    is the circulant case below; generalizing it to arbitrary sparse
+    graphs is future work recorded in DESIGN.md §3.
+    """
+    idx, mask = topo.neighbor_idx, topo.neighbor_mask
+
+    def local_mix(weights, theta):
+        j = jax.lax.axis_index(axis)
+        full = jax.lax.all_gather(theta, axis, axis=0, tiled=True)  # (N, D)
+        cols = idx[j]                                   # (K,)
+        w = weights[j, cols] * mask[j]                  # (K,)
+        return (w @ jnp.take(full, cols, axis=0))[None]
+
+    return shard_map(local_mix, mesh=mesh,
+                     in_specs=(P(None, None), P(axis, None)),
+                     out_specs=P(axis, None))
+
+
+def make_topology_mixing(mesh: Mesh, axis: str, topo: Topology):
+    """Pick the distributed mixing backend from the topology's physical
+    representation. The circulant ppermute chain (p·N·D bytes) is one case
+    of the same dispatch; dense and sparse share the all-gather wire
+    format and differ in local contraction cost."""
+    if topo.kind == "circulant":
+        return make_permute_mixing(mesh, axis, topo.offsets)
+    if topo.kind == "sparse":
+        return make_sparse_gather_mixing(mesh, axis, topo)
+    return make_allgather_mixing(mesh, axis)

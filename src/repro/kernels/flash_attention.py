@@ -30,17 +30,21 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
                   window: int, chunk: int, block_q: int, block_k: int,
                   seq_k: int, seq_k_valid: int):
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32)            # (block_q, G, hd)
+    # NOTE: literal-int ref indices (q_ref[0]) break pallas interpret on
+    # jax 0.4.37 (NDIndexer requires Slice / shaped scalars) — index with
+    # scalar arrays / load the whole block instead, throughout this file.
+    zero = jnp.int32(0)
+    q = q_ref[...][0].astype(jnp.float32)       # (block_q, G, hd)
     g, hd = q.shape[1], q.shape[2]
     q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
 
     def body(ki, carry):
         acc, m, l = carry
         k_tile = pl.load(
-            k_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))
+            k_ref, (zero, pl.dslice(ki * block_k, block_k), slice(None))
         ).astype(jnp.float32)                   # (block_k, hd)
         v_tile = pl.load(
-            v_ref, (0, pl.dslice(ki * block_k, block_k), slice(None))
+            v_ref, (zero, pl.dslice(ki * block_k, block_k), slice(None))
         ).astype(jnp.float32)                   # (block_k, hd)
         k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
         s = jnp.einsum("qgd,kd->gqk", q, k_tile,
@@ -70,7 +74,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
     n_k = seq_k // block_k
     acc, m, l = jax.lax.fori_loop(0, n_k, body, (acc0, m0, l0))
     out = acc / jnp.maximum(l[..., None], 1e-30)        # (g, block_q, hd)
-    o_ref[0] = out.swapaxes(0, 1).astype(o_ref.dtype)   # (block_q, g, hd)
+    o_ref[...] = out.swapaxes(0, 1).astype(o_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=(

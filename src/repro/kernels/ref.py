@@ -20,6 +20,26 @@ def netes_mixing_ref(adj, w_theta, w_eps, theta, eps, *, sigma: float):
     return mixed.astype(theta.dtype)
 
 
+def sparse_mixing_ref(neighbor_idx, neighbor_mask, w_theta, w_eps, theta,
+                      eps, *, sigma: float):
+    """Neighbor-list mixing oracle — same math as ``netes_mixing_ref``
+    restricted to the listed edges:
+
+        out_j = Σ_k m_jk R̃θ_{i_jk} (θ_{i_jk} − θ_j)
+                + σ Σ_k m_jk R̃ε_{i_jk} ε_{i_jk}.
+    """
+    idx = neighbor_idx
+    mask = neighbor_mask.astype(jnp.float32)
+    wt_nb = mask * jnp.take(w_theta.astype(jnp.float32), idx)   # (N, K)
+    we_nb = mask * jnp.take(w_eps.astype(jnp.float32), idx)
+    th_nb = jnp.take(theta.astype(jnp.float32), idx, axis=0)    # (N, K, P)
+    ep_nb = jnp.take(eps.astype(jnp.float32), idx, axis=0)
+    mixed = jnp.einsum("jk,jkd->jd", wt_nb, th_nb)
+    mixed += sigma * jnp.einsum("jk,jkd->jd", we_nb, ep_nb)
+    mixed -= wt_nb.sum(axis=1)[:, None] * theta.astype(jnp.float32)
+    return mixed.astype(theta.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         chunk: int = 0, scale=None):
     """Naive softmax attention. q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd)."""

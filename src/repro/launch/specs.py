@@ -17,7 +17,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import ModelConfig
+from repro.core import topology_repr
 from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
 from repro.distributed import netes_dist, sharding
 from repro.models import transformer
 
@@ -37,19 +39,31 @@ PARAM_DTYPE = jnp.bfloat16
 
 @dataclasses.dataclass(frozen=True)
 class PairSpec:
-    """Everything needed to lower one (arch × shape × mesh) combination."""
+    """Everything needed to lower one (arch × shape × mesh) combination.
+
+    ``topo`` is the serializable TopologySpec a topology sweep passed to
+    ``classify`` (None otherwise — serve pairs, and train pairs that keep
+    the legacy runtime-``adj`` contract); when set, ``build_step`` turns
+    it into a representation-selected ``core.topology_repr.Topology`` and
+    the lowered HLO carries the sparse/circulant mixing backend — closing
+    over the topology and IGNORING the runtime ``adj`` input (DESIGN.md
+    §3).
+    """
     arch: str
     shape_name: str
     mode: str                 # replica | consensus | serve
     kind: str                 # train | prefill | decode
     cfg: ModelConfig
     n_agents: int
+    topo: Optional[TopologySpec] = None
 
 
-def classify(arch: str, shape_name: str, mesh: Mesh) -> PairSpec:
+def classify(arch: str, shape_name: str, mesh: Mesh,
+             topo_spec: Optional[TopologySpec] = None) -> PairSpec:
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     kind = shape["kind"]
+    topo = None
     if kind == "train":
         mode = "consensus" if arch in CONSENSUS_ARCHS else "replica"
         if mode == "consensus":
@@ -58,10 +72,17 @@ def classify(arch: str, shape_name: str, mesh: Mesh) -> PairSpec:
             n = shape["global_batch"] // sharding.n_agents(mesh)
         else:
             n = sharding.n_agents(mesh)
+        # ``topo`` stays None unless a spec was explicitly requested: a
+        # built Topology makes the step CLOSE OVER it and ignore the
+        # runtime ``adj`` input, so defaulting one here would silently
+        # break callers that feed real adjacencies to the lowered step.
+        if topo_spec is not None:
+            topo = (topo_spec if topo_spec.n_agents == n
+                    else dataclasses.replace(topo_spec, n_agents=n))
     else:
         mode, n = "serve", 0
     return PairSpec(arch=arch, shape_name=shape_name, mode=mode, kind=kind,
-                    cfg=cfg, n_agents=n)
+                    cfg=cfg, n_agents=n, topo=topo)
 
 
 # ---------------------------------------------------------------------------
@@ -122,10 +143,11 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def input_specs(arch: str, shape_name: str, mesh: Mesh,
-                dtype=PARAM_DTYPE) -> Dict[str, Any]:
+                dtype=PARAM_DTYPE,
+                topo_spec: Optional[TopologySpec] = None) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every input of the lowered step
     (params, adjacency, batch/cache, rng key), plus their PartitionSpecs."""
-    pair = classify(arch, shape_name, mesh)
+    pair = classify(arch, shape_name, mesh, topo_spec=topo_spec)
     cfg = pair.cfg
     shape = INPUT_SHAPES[shape_name]
     seq, gbatch = shape["seq_len"], shape["global_batch"]
@@ -187,12 +209,16 @@ def build_step(pair: PairSpec, mesh: Mesh,
     ncfg = ncfg or NetESConfig()
     cfg = pair.cfg
     if pair.kind == "train":
+        topo = (topology_repr.from_spec(pair.topo)
+                if pair.topo is not None else None)
         if pair.mode == "replica":
             step = netes_dist.make_replica_train_step(
-                cfg, ncfg, pair.n_agents, sharding.agent_axes(mesh))
+                cfg, ncfg, pair.n_agents, sharding.agent_axes(mesh),
+                topology=topo)
         else:
             step = netes_dist.make_consensus_train_step(cfg, ncfg,
-                                                        pair.n_agents)
+                                                        pair.n_agents,
+                                                        topology=topo)
         return step, ("params", "adj", "batch", "key")
     if pair.kind == "prefill":
         return netes_dist.make_prefill_step(cfg), ("params", "batch")
@@ -208,9 +234,10 @@ def named_shardings(mesh: Mesh, spec_tree: Any) -> Any:
 
 
 def lower_pair(arch: str, shape_name: str, mesh: Mesh,
-               ncfg: Optional[NetESConfig] = None, dtype=PARAM_DTYPE):
+               ncfg: Optional[NetESConfig] = None, dtype=PARAM_DTYPE,
+               topo_spec: Optional[TopologySpec] = None):
     """Lower one (arch × shape × mesh). Returns (lowered, pair)."""
-    info = input_specs(arch, shape_name, mesh, dtype)
+    info = input_specs(arch, shape_name, mesh, dtype, topo_spec=topo_spec)
     pair = info["pair"]
     fn, order = build_step(pair, mesh, ncfg)
     args = [info["args"][k] for k in order]

@@ -16,6 +16,7 @@ import pathlib
 
 from repro.configs import get_config
 from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
 from repro.train.loop import TrainConfig, train_lm_netes, train_rl_netes
 
 
@@ -26,6 +27,10 @@ def main() -> None:
     ap.add_argument("--arch", default="gemma3-4b-smoke")
     ap.add_argument("--topology", default="erdos_renyi")
     ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--representation", default="auto",
+                    choices=["auto", "dense", "sparse", "circulant"],
+                    help="physical topology representation (DESIGN.md §3)")
+    ap.add_argument("--topo-seed", type=int, default=0)
     ap.add_argument("--agents", type=int, default=32)
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
@@ -38,7 +43,9 @@ def main() -> None:
 
     tc = TrainConfig(
         n_agents=args.agents, iters=args.iters,
-        topology_family=args.topology, density=args.density,
+        topology=TopologySpec(family=args.topology, n_agents=args.agents,
+                              p=args.density, seed=args.topo_seed),
+        representation=args.representation,
         seed=args.seed,
         netes=NetESConfig(alpha=args.alpha, sigma=args.sigma,
                           p_broadcast=args.p_broadcast))

@@ -18,8 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import netes, topology
+from repro.core import netes, topology, topology_repr
 from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
 from repro.data import make_batch
 from repro.distributed import netes_dist
 from repro.envs import ENVS, MLPPolicy, make_env_reward_fn, \
@@ -32,6 +33,11 @@ from repro.models import transformer
 class TrainConfig:
     n_agents: int = 32
     iters: int = 100
+    # The topology travels as a serializable TopologySpec end-to-end; the
+    # legacy (family, density, seed) triplet is kept as constructor sugar
+    # and folded into ``topology`` in __post_init__.
+    topology: Optional[TopologySpec] = None
+    representation: str = "auto"    # auto | dense | sparse | circulant
     topology_family: str = "erdos_renyi"
     density: float = 0.5
     topo_seed: int = 0
@@ -40,14 +46,27 @@ class TrainConfig:
     eval_episodes: int = 16
     netes: NetESConfig = dataclasses.field(default_factory=NetESConfig)
 
+    def __post_init__(self):
+        if self.topology is None:
+            self.topology = TopologySpec(
+                family=self.topology_family, n_agents=self.n_agents,
+                p=self.density, seed=self.topo_seed)
+        else:
+            self.n_agents = self.topology.n_agents
+            self.topology_family = self.topology.family
+            self.density = self.topology.p
+            self.topo_seed = self.topology.seed
+
+
+def build_topology(tc: TrainConfig) -> topology_repr.Topology:
+    """TopologySpec → representation-selected Topology (DESIGN.md §3)."""
+    return topology_repr.from_spec(tc.topology,
+                                   representation=tc.representation)
+
 
 def build_adjacency(tc: TrainConfig) -> jnp.ndarray:
-    kwargs = {}
-    if tc.topology_family not in ("fully_connected", "disconnected", "star",
-                                  "ring"):
-        kwargs["p"] = tc.density
-    return jnp.asarray(topology.make_topology(
-        tc.topology_family, tc.n_agents, seed=tc.topo_seed, **kwargs))
+    """Dense (N, N) adjacency — kept for graph-statistics consumers."""
+    return jnp.asarray(tc.topology.build())
 
 
 def train_rl_netes(task: str, tc: TrainConfig,
@@ -71,31 +90,60 @@ def train_rl_netes(task: str, tc: TrainConfig,
         dim = policy.num_params
         init_fn = policy.init
 
-    adj = build_adjacency(tc)
+    topo = build_topology(tc)
     state = netes.init_state(key, tc.n_agents, dim, init_fn=init_fn)
     history: Dict[str, List] = {"reward_mean": [], "reward_max": [],
                                 "eval": [], "eval_iter": []}
-    eval_key = jax.random.PRNGKey(tc.seed + 999)
     t0 = time.time()
-    for it in range(tc.iters):
-        state, m = netes.netes_step(state, adj, reward_fn, tc.netes)
-        history["reward_mean"].append(float(m["reward_mean"]))
-        history["reward_max"].append(float(m["reward_max"]))
-        # paper §5.2: with prob 0.08, pause and evaluate best params
-        eval_key, k_draw, k_eval = jax.random.split(eval_key, 3)
-        do_eval = (it % tc.eval_every == tc.eval_every - 1) if tc.eval_every \
-            else bool(jax.random.uniform(k_draw) < 0.08)
-        if do_eval or it == tc.iters - 1:
-            if env is not None:
-                score = float(evaluate_best(env, policy, state.best_theta,
-                                            k_eval, tc.eval_episodes))
-            else:
-                score = float(reward_fn(state.best_theta[None], k_eval)[0])
-            history["eval"].append(score)
-            history["eval_iter"].append(it)
-            if log:
-                log({"iter": it, "eval": score,
-                     "reward_mean": history["reward_mean"][-1]})
+
+    # Paper §5.2 eval protocol, decided host-side UP FRONT (prob 0.08 per
+    # iteration, or fixed cadence): the iterations between eval points run
+    # as fused lax.scans (netes.run) and the per-iteration metrics are
+    # drained in a single host transfer per chunk — the per-step float()
+    # conversions forced a device sync every iteration. Scans use ONE
+    # fixed length (gaps are split into ``scan_chunk``-sized scans + a
+    # per-step jitted tail), so XLA compiles the scan once instead of once
+    # per distinct gap length under the random-eval protocol.
+    if tc.eval_every:
+        eval_iters = list(range(tc.eval_every - 1, tc.iters, tc.eval_every))
+        scan_chunk = tc.eval_every
+    else:
+        draw = np.random.default_rng(tc.seed + 999)
+        eval_iters = [it for it in range(tc.iters) if draw.random() < 0.08]
+        scan_chunk = 8
+    if tc.iters > 0 and tc.iters - 1 not in eval_iters:
+        eval_iters.append(tc.iters - 1)
+
+    def drain(m):
+        history["reward_mean"].extend(
+            np.asarray(m["reward_mean"], np.float64).reshape(-1).tolist())
+        history["reward_max"].extend(
+            np.asarray(m["reward_max"], np.float64).reshape(-1).tolist())
+
+    eval_key = jax.random.PRNGKey(tc.seed + 999)
+    start = 0
+    for it in eval_iters:
+        todo = it - start + 1
+        start = it + 1
+        while todo >= scan_chunk:
+            state, m = netes.run(state, topo, reward_fn, tc.netes,
+                                 num_iters=scan_chunk)
+            drain(m)
+            todo -= scan_chunk
+        for _ in range(todo):   # tail < scan_chunk: jitted single steps
+            state, m = netes.netes_step(state, topo, reward_fn, tc.netes)
+            drain(m)
+        eval_key, k_eval = jax.random.split(eval_key)
+        if env is not None:
+            score = float(evaluate_best(env, policy, state.best_theta,
+                                        k_eval, tc.eval_episodes))
+        else:
+            score = float(reward_fn(state.best_theta[None], k_eval)[0])
+        history["eval"].append(score)
+        history["eval_iter"].append(it)
+        if log:
+            log({"iter": it, "eval": score,
+                 "reward_mean": history["reward_mean"][-1]})
     history["final_eval"] = history["eval"][-1] if history["eval"] else None
     history["max_eval"] = max(history["eval"]) if history["eval"] else None
     history["wall_s"] = time.time() - t0
@@ -116,8 +164,10 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
     """
     key = jax.random.PRNGKey(tc.seed)
     n = tc.n_agents
+    topo = build_topology(tc)
     step = netes_dist.make_replica_train_step(
-        cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1)
+        cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1,
+        topology=topo)
     step = jax.jit(step)
     if same_init:
         p0 = transformer.init_params(key, cfg)
@@ -126,7 +176,7 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
     else:
         params = jax.vmap(lambda k: transformer.init_params(k, cfg))(
             jax.random.split(key, n))
-    adj = build_adjacency(tc)
+    adj = topo.to_dense()   # step dispatches on topo; adj kept for the API
     history: Dict[str, List] = {"loss_mean": [], "reward_max": []}
     for it in range(tc.iters):
         key, k_batch, k_step = jax.random.split(key, 3)

@@ -40,9 +40,10 @@ _SUBPROCESS_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from repro.core import topology
+from repro.core import topology, topology_repr
 from repro.distributed.permute_mixing import (circulant_mixing_ref,
-                                              make_permute_mixing)
+                                              make_permute_mixing,
+                                              make_topology_mixing)
 
 n = 8
 adj = topology.circulant_erdos_renyi(n, p=0.5, seed=1)
@@ -57,6 +58,17 @@ with mesh:
 expect = circulant_mixing_ref(weights, thetas, offsets)
 np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                            rtol=1e-5, atol=1e-5)
+
+# representation dispatch: every backend of make_topology_mixing must
+# reproduce the dense masked contraction on the SAME graph
+dense_expect = jnp.einsum("ji,id->jd", weights, thetas)
+for representation in ("dense", "sparse", "circulant"):
+    topo = topology_repr.from_dense(adj, representation)
+    mix_r = make_topology_mixing(mesh, "data", topo)
+    with mesh:
+        out_r = jax.jit(mix_r)(weights, thetas)
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(dense_expect),
+                               rtol=1e-5, atol=1e-5, err_msg=representation)
 print("PERMUTE_MIXING_OK")
 """
 
