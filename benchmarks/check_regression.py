@@ -1,0 +1,292 @@
+"""Perf-regression gate: diff a fresh ``benchmarks/run.py`` output against
+the committed ``benchmarks/baselines/`` snapshot and exit non-zero on any
+regression.
+
+  python benchmarks/check_regression.py --candidate bench-out
+  python benchmarks/check_regression.py --candidate bench-out --update
+
+Per-metric policy (rationale in DESIGN.md §8):
+
+* ``schema_version`` — must match exactly; a bumped schema means the
+  baselines must be regenerated in the same PR.
+* ``profile`` — must match exactly: entries from different profiles run
+  at different scales and are not comparable. ``--update`` likewise
+  refuses candidates whose profile differs from the committed baselines,
+  or whose entry sets drop baseline entries (partial ``--only`` runs).
+* missing entry / missing metric — an entry (or a metric a baseline entry
+  carries) that disappears from the candidate FAILS: silently dropping a
+  measurement is how regressions hide. A missing committed *baseline*
+  artifact fails too (the gate never fails open); ``--bootstrap`` is the
+  explicit first-time-setup escape hatch.
+* ``wire_bytes`` — exact equality. Modeled per-chip collective bytes are
+  a deterministic function of the topology, identical on every machine;
+  ANY drift is a real change to the communication pattern and must be
+  acknowledged by updating the baseline.
+* ``eval_score`` — one-sided: only degradation beyond the slack fails
+  (scores are stored higher-is-better); improvements pass silently.
+* ``wall_s`` — candidate slower than baseline × (1 + tol) fails, with
+  tol = 30% (CI-runner noise band). Faster is never a failure. Wall-times
+  are only comparable on like hardware, so when the recorded ``env.cpu``
+  differs between baseline and candidate the wall check downgrades to a
+  warning — wire bytes and eval scores still gate.
+
+New candidate entries (no baseline yet) pass with a note; commit refreshed
+baselines (``--update``) to start gating them.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import shutil
+import sys
+from typing import Any, Dict, List, Optional
+
+# Works as `python benchmarks/check_regression.py` from any CWD: the repo
+# root provides the `benchmarks` package.
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
+
+from benchmarks import registry                               # noqa: E402
+
+BASELINE_DIR = registry.REPO_ROOT / "benchmarks" / "baselines"
+
+WALL_REL_TOL = 0.30      # CI-hardware noise band for wall-times
+EVAL_REL_TOL = 0.05      # one-sided slack for eval scores
+EVAL_ABS_TOL = 1e-6      # floor so near-zero baselines aren't zero-slack
+
+
+@dataclasses.dataclass
+class Finding:
+    group: str
+    entry: str
+    metric: str
+    message: str
+    fatal: bool
+
+    def __str__(self) -> str:
+        tag = "FAIL" if self.fatal else "note"
+        return f"[{tag}] {self.group}/{self.entry}.{self.metric}: " \
+               f"{self.message}"
+
+
+def _fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "None"
+    if isinstance(v, int):        # exact metrics print exactly
+        return str(v)
+    return f"{v:.6g}"
+
+
+def compare_artifacts(baseline: Dict[str, Any], candidate: Dict[str, Any],
+                      wall_rel_tol: float = WALL_REL_TOL,
+                      eval_rel_tol: float = EVAL_REL_TOL) -> List[Finding]:
+    """Diff one BENCH_<group>.json pair. Returns all findings (fatal and
+    informational); the caller decides the exit code."""
+    group = baseline.get("group", "?")
+    out: List[Finding] = []
+
+    b_schema = baseline.get("schema_version")
+    c_schema = candidate.get("schema_version")
+    if b_schema != c_schema:
+        out.append(Finding(group, "-", "schema_version",
+                           f"baseline v{b_schema} vs candidate v{c_schema} "
+                           "— regenerate baselines for the new schema",
+                           fatal=True))
+        return out           # entry layout may differ; nothing else gates
+
+    b_profile = baseline.get("profile")
+    c_profile = candidate.get("profile")
+    if b_profile != c_profile:
+        out.append(Finding(group, "-", "profile",
+                           f"baseline ran profile {b_profile!r} but "
+                           f"candidate ran {c_profile!r} — scales differ, "
+                           "metrics are not comparable", fatal=True))
+        return out           # entry sets/scales differ; nothing else gates
+
+    b_cpu = baseline.get("env", {}).get("cpu")
+    c_cpu = candidate.get("env", {}).get("cpu")
+    # Wall-times gate fatally only on KNOWN like hardware; "unknown" never
+    # matches anything (two different machines can both fail the cpuinfo
+    # probe).
+    same_cpu = b_cpu == c_cpu and b_cpu not in (None, "", "unknown")
+    if b_cpu in (None, "", "unknown"):
+        out.append(Finding(
+            group, "-", "env.cpu",
+            "baseline cpu is unknown — wall_s runs advisory-only; refresh "
+            "baselines from a CI bench-artifacts run (--update) to arm the "
+            "wall gate", fatal=False))
+    b_entries = baseline.get("entries", {})
+    c_entries = candidate.get("entries", {})
+
+    for name in sorted(set(c_entries) - set(b_entries)):
+        out.append(Finding(group, name, "-",
+                           "new entry (no baseline yet) — refresh baselines "
+                           "to start gating it", fatal=False))
+
+    for name, b in sorted(b_entries.items()):
+        c = c_entries.get(name)
+        if c is None:
+            out.append(Finding(group, name, "-",
+                               "entry missing from candidate", fatal=True))
+            continue
+
+        for metric in ("wire_bytes", "eval_score", "wall_s"):
+            bv, cv = b.get(metric), c.get(metric)
+            if bv is None:
+                continue
+            if cv is None:
+                out.append(Finding(group, name, metric,
+                                   f"baseline has {_fmt(bv)} but candidate "
+                                   "dropped the metric", fatal=True))
+                continue
+            if metric == "wire_bytes":
+                if cv != bv:
+                    out.append(Finding(
+                        group, name, metric,
+                        f"{_fmt(bv)} -> {_fmt(cv)} (exact-match metric: "
+                        "the modeled communication pattern changed)",
+                        fatal=True))
+            elif metric == "eval_score":
+                slack = max(EVAL_ABS_TOL, eval_rel_tol * abs(bv))
+                if cv < bv - slack:
+                    out.append(Finding(
+                        group, name, metric,
+                        f"{_fmt(bv)} -> {_fmt(cv)} (degraded beyond "
+                        f"slack {_fmt(slack)})", fatal=True))
+            else:  # wall_s
+                if cv > bv * (1.0 + wall_rel_tol):
+                    out.append(Finding(
+                        group, name, metric,
+                        f"{_fmt(bv)}s -> {_fmt(cv)}s "
+                        f"(> +{wall_rel_tol:.0%}"
+                        + ("" if same_cpu
+                           else "; cpus not comparable — advisory")
+                        + ")",
+                        fatal=same_cpu))
+                elif cv < bv * (1.0 - wall_rel_tol):
+                    out.append(Finding(
+                        group, name, metric,
+                        f"{_fmt(bv)}s -> {_fmt(cv)}s (improved beyond "
+                        "tolerance — consider refreshing baselines)",
+                        fatal=False))
+    return out
+
+
+def check_dirs(baseline_dir: pathlib.Path, candidate_dir: pathlib.Path,
+               wall_rel_tol: float = WALL_REL_TOL,
+               eval_rel_tol: float = EVAL_REL_TOL,
+               bootstrap: bool = False) -> List[Finding]:
+    findings: List[Finding] = []
+    for group in registry.GROUPS:
+        b_path = registry.artifact_path(baseline_dir, group)
+        c_path = registry.artifact_path(candidate_dir, group)
+        if not b_path.exists():
+            # Fail CLOSED: baselines are committed, so a missing one means
+            # they were deleted/dropped — exactly the silent-un-gating
+            # this tool exists to prevent. ``--bootstrap`` is the explicit
+            # first-time-setup escape hatch.
+            findings.append(Finding(group, "-", "-",
+                                    f"no committed baseline {b_path.name} — "
+                                    "run with --update to create it",
+                                    fatal=not bootstrap))
+            continue
+        if not c_path.exists():
+            findings.append(Finding(group, "-", "-",
+                                    f"candidate artifact {c_path.name} "
+                                    "missing", fatal=True))
+            continue
+        findings.extend(compare_artifacts(
+            registry.load_artifact(b_path), registry.load_artifact(c_path),
+            wall_rel_tol=wall_rel_tol, eval_rel_tol=eval_rel_tol))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE_DIR)
+    ap.add_argument("--candidate", type=pathlib.Path, required=True,
+                    help="directory holding a fresh run's BENCH_*.json")
+    ap.add_argument("--wall-rel-tol", type=float, default=WALL_REL_TOL)
+    ap.add_argument("--eval-rel-tol", type=float, default=EVAL_REL_TOL)
+    ap.add_argument("--update", action="store_true",
+                    help="copy the candidate artifacts over the baselines "
+                         "instead of checking")
+    ap.add_argument("--bootstrap", action="store_true",
+                    help="first-time setup: missing baseline artifacts "
+                         "are notes instead of failures")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        missing = [registry.artifact_path(args.candidate, g).name
+                   for g in registry.GROUPS
+                   if not registry.artifact_path(args.candidate, g).exists()]
+        if missing:
+            print(f"refusing --update: candidate {args.candidate} is "
+                  f"missing {', '.join(missing)} — run benchmarks/run.py "
+                  "first (baselines left untouched)")
+            return 1
+        # A partial run (--only) still writes all three group files, with
+        # empty/shrunken entry sets — copying those over would silently
+        # stop gating the dropped entries. Refuse unless every existing
+        # baseline entry is still present in the candidate.
+        for group in registry.GROUPS:
+            b_path = registry.artifact_path(args.baseline, group)
+            if not b_path.exists():
+                continue
+            b_art = registry.load_artifact(b_path)
+            c_art = registry.load_artifact(
+                registry.artifact_path(args.candidate, group))
+            if b_art.get("profile") != c_art.get("profile"):
+                print(f"refusing --update: candidate {group} artifact ran "
+                      f"profile {c_art.get('profile')!r} but the existing "
+                      f"baseline is {b_art.get('profile')!r} — the CI gate "
+                      "compares profiles fatally; delete the baselines "
+                      "first if the switch is intentional")
+                return 1
+            b_names = set(b_art.get("entries", {}))
+            c_names = set(c_art.get("entries", {}))
+            dropped = sorted(b_names - c_names)
+            if dropped:
+                print(f"refusing --update: candidate {group} artifact "
+                      f"drops baseline entries {dropped} (partial/--only "
+                      "run?) — regenerate with the full profile "
+                      "(baselines left untouched)")
+                return 1
+        # Never promote a failed run into the baselines (the bootstrap
+        # path has no existing baseline to diff against, so the checks
+        # above can't catch it): error/duplicate entries carry no gated
+        # metrics and would silently un-gate whatever crashed.
+        for group in registry.GROUPS:
+            c_art = registry.load_artifact(
+                registry.artifact_path(args.candidate, group))
+            broken = sorted(
+                name for name, e in c_art.get("entries", {}).items()
+                if "error" in (e.get("extra") or {}))
+            if broken:
+                print(f"refusing --update: candidate {group} artifact "
+                      f"contains failed entries {broken} — fix the run "
+                      "first (baselines left untouched)")
+                return 1
+        args.baseline.mkdir(parents=True, exist_ok=True)
+        for group in registry.GROUPS:
+            src = registry.artifact_path(args.candidate, group)
+            shutil.copy(src, registry.artifact_path(args.baseline, group))
+            print(f"updated {group} baseline from {src}")
+        return 0
+
+    findings = check_dirs(args.baseline, args.candidate,
+                          wall_rel_tol=args.wall_rel_tol,
+                          eval_rel_tol=args.eval_rel_tol,
+                          bootstrap=args.bootstrap)
+    for f in findings:
+        print(f)
+    fatal = sum(f.fatal for f in findings)
+    print(f"check_regression: {fatal} regression(s), "
+          f"{len(findings) - fatal} note(s)")
+    return 1 if fatal else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,15 +5,14 @@ millions of timesteps; this container is one CPU core. The benchmarks keep
 the paper's experimental DESIGN (same-density topology comparisons, same
 update rule, same evaluation protocol, multi-seed averages with CIs) at
 reduced scale — agents, iterations and episodes shrink, the comparisons
-don't. ``--quick`` shrinks further for smoke runs.
+don't. The ``ci``/``quick`` profiles (benchmarks/registry.py) shrink
+further for smoke runs.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import pathlib
-import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List
 
 import numpy as np
 
@@ -21,7 +20,18 @@ from repro.core.netes import NetESConfig
 from repro.core.topology import TopologySpec
 from repro.train.loop import TrainConfig, train_rl_netes
 
-RESULTS_DIR = pathlib.Path("experiments/paper")
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Science-payload output dir. The registry routes this through the run's
+# ``--out-dir`` (``Context.results_dir()``); the default is anchored to the
+# REPO ROOT, not the CWD — the seed's ``pathlib.Path("experiments/paper")``
+# scattered artifacts wherever the process happened to start.
+_results_dir = REPO_ROOT / "experiments" / "paper"
+
+
+def set_results_dir(path: pathlib.Path) -> None:
+    global _results_dir
+    _results_dir = pathlib.Path(path)
 
 
 def run_one(task: str, family: str, n_agents: int, iters: int, seed: int,
@@ -61,8 +71,8 @@ def compare(task: str, families: Iterable[str], n_agents: int, iters: int,
 
 
 def save_result(name: str, payload: Dict) -> None:
-    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    (RESULTS_DIR / f"{name}.json").write_text(
+    _results_dir.mkdir(parents=True, exist_ok=True)
+    (_results_dir / f"{name}.json").write_text(
         json.dumps(payload, indent=2, default=str))
 
 

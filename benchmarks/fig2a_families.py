@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import time
 
-from . import common
+from . import common, registry
 
 FAMILIES = ["erdos_renyi", "scale_free", "small_world", "fully_connected"]
 
@@ -18,15 +18,23 @@ def run(quick: bool = False):
     for task in ["cartpole_swingup"]:
         t0 = time.time()
         res = common.compare(task, FAMILIES, n, iters, seeds)
-        results[task] = res
+        results[task] = {"wall_s": time.time() - t0, **res}
         er = res["erdos_renyi"]["mean"]
         fc = res["fully_connected"]["mean"]
         best = max(res, key=lambda f: res[f]["mean"])
-        common.emit(f"fig2a.{task.replace(':', '_')}", time.time() - t0,
+        common.emit(f"fig2a.{task.replace(':', '_')}",
+                    results[task]["wall_s"],
                     f"best={best} er={er:.2f} fc={fc:.2f}")
     common.save_result("fig2a_families", results)
     return results
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("fig2a", group="topologies", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    results = run(quick=ctx.quick)
+    return [registry.Entry(
+        name=f"fig2a.{task.replace(':', '_')}",
+        wall_s=res["wall_s"],
+        eval_score=res["erdos_renyi"]["mean"],
+        extra={fam: res[fam]["mean"] for fam in FAMILIES})
+        for task, res in results.items()]

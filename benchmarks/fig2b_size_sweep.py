@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from . import common
+from . import common, registry
 
 
 def run(quick: bool = False):
@@ -19,13 +19,21 @@ def run(quick: bool = False):
         fc = common.compare(task, ["fully_connected"], n * mult, iters,
                             seeds)
         rows["fc"][f"n={n * mult}"] = fc["fully_connected"]
+    rows["wall_s"] = time.time() - t0
     er_score = rows["er"]["mean"]
     fc3 = rows["fc"][f"n={n * 3}"]["mean"]
-    common.emit("fig2b.size_sweep", time.time() - t0,
+    common.emit("fig2b.size_sweep", rows["wall_s"],
                 f"er@{n}={er_score:.2f} fc@{3 * n}={fc3:.2f}")
     common.save_result("fig2b_size_sweep", rows)
     return rows
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("fig2b", group="topologies", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    rows = run(quick=ctx.quick)
+    return [registry.Entry(
+        name="fig2b.size_sweep",
+        wall_s=rows["wall_s"],
+        eval_score=rows["er"]["mean"],
+        extra={"n": rows["er"]["n"],
+               "fc": {k: v["mean"] for k, v in rows["fc"].items()}})]

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import time
 
-from . import common
+from . import common, registry
 
 
 def run(quick: bool = False):
@@ -13,21 +13,28 @@ def run(quick: bool = False):
     task = "cartpole_swingup"
     t0 = time.time()
     rows = {}
-    for p_b in ([0.0, 0.8] if quick else [0.0, 0.8]):
+    for p_b in [0.0, 0.8]:
         res = common.compare(task, ["disconnected"], n, iters, seeds,
                              p_broadcast=p_b)
         rows[f"disconnected_pb={p_b}"] = res["disconnected"]
     for fam in ["erdos_renyi", "fully_connected"]:
         res = common.compare(task, [fam], n, iters, seeds, p_broadcast=0.8)
         rows[fam] = res[fam]
+    rows["wall_s"] = time.time() - t0
     er = rows["erdos_renyi"]["mean"]
     disc = max(v["mean"] for k, v in rows.items()
                if k.startswith("disconnected"))
-    common.emit("fig3a.broadcast", time.time() - t0,
+    common.emit("fig3a.broadcast", rows["wall_s"],
                 f"er={er:.2f} best_disconnected={disc:.2f}")
     common.save_result("fig3a_broadcast", rows)
     return rows
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("fig3a", group="topologies", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    rows = run(quick=ctx.quick)
+    return [registry.Entry(
+        name="fig3a.broadcast",
+        wall_s=rows["wall_s"],
+        eval_score=rows["erdos_renyi"]["mean"],
+        extra={k: v["mean"] for k, v in rows.items() if k != "wall_s"})]

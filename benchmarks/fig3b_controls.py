@@ -17,7 +17,7 @@ from repro.envs import ENVS, MLPPolicy, make_env_reward_fn
 from repro.envs.rollout import evaluate_best
 from repro.train.loop import TrainConfig, build_adjacency
 
-from . import common
+from . import common, registry
 
 CONTROLS = [
     ("fc_same_init_no_bcast", "fully_connected", True, 0.0),
@@ -60,12 +60,19 @@ def run(quick: bool = False):
                       "scores": scores}
     best_control = max((v["mean"] for k, v in rows.items()
                         if k != "netes_erdos"))
-    common.emit("fig3b.controls", time.time() - t0,
+    rows["wall_s"] = time.time() - t0
+    common.emit("fig3b.controls", rows["wall_s"],
                 f"netes_er={rows['netes_erdos']['mean']:.2f} "
                 f"best_fc_control={best_control:.2f}")
     common.save_result("fig3b_controls", rows)
     return rows
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("fig3b", group="topologies", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    rows = run(quick=ctx.quick)
+    return [registry.Entry(
+        name="fig3b.controls",
+        wall_s=rows["wall_s"],
+        eval_score=rows["netes_erdos"]["mean"],
+        extra={k: v["mean"] for k, v in rows.items() if k != "wall_s"})]

@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.core import topology
 
-from . import common
+from . import common, registry
 
 
 def run(quick: bool = False):
@@ -36,11 +36,20 @@ def run(quick: bool = False):
         })
     max_rel = max(abs(r["reachability"] - r["reachability_approx"])
                   / r["reachability"] for r in rows if r["p"] >= 0.3)
-    common.emit("fig4.approximations", time.time() - t0,
+    wall_s = time.time() - t0
+    common.emit("fig4.approximations", wall_s,
                 f"n={n} max_rel_err(p>=0.3)={max_rel:.3f}")
     common.save_result("fig4_approx", {"n": n, "rows": rows})
-    return rows
+    return {"n": n, "rows": rows, "max_rel_err": max_rel, "wall_s": wall_s}
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("fig4", group="topologies")
+def bench(ctx: registry.Context):
+    res = run(quick=ctx.quick)
+    # eval_score is higher-is-better by schema: store the NEGATED max
+    # relative error of the Lemma 7.2 closed forms (deterministic seeds).
+    return [registry.Entry(
+        name="fig4.approximations",
+        wall_s=res["wall_s"],
+        eval_score=-res["max_rel_err"],
+        extra={"n": res["n"], "max_rel_err": res["max_rel_err"]})]

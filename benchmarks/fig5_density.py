@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from . import common
+from . import common, registry
 
 
 def run(quick: bool = False):
@@ -25,11 +25,20 @@ def run(quick: bool = False):
         rows[f"er_p={p}"] = r
     sparse = rows[f"er_p={densities[0]}"]["mean"]
     dense = rows[f"er_p={densities[-1]}"]["mean"]
-    common.emit("fig5.density", time.time() - t0,
+    rows["wall_s"] = time.time() - t0
+    rows["sparsest"] = f"er_p={densities[0]}"
+    common.emit("fig5.density", rows["wall_s"],
                 f"sparse={sparse:.2f} dense={dense:.2f} fc={fc_mean:.2f}")
     common.save_result("fig5_density", rows)
     return rows
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("fig5", group="topologies", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    rows = run(quick=ctx.quick)
+    return [registry.Entry(
+        name="fig5.density",
+        wall_s=rows["wall_s"],
+        eval_score=rows[rows["sparsest"]]["mean"],
+        extra={k: v["mean"] for k, v in rows.items()
+               if isinstance(v, dict)})]

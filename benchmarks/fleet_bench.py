@@ -1,0 +1,208 @@
+"""Fleet-scale benchmark: the paper's N ≈ 1000 regime, measured.
+
+The headline claim (Fig. 2B: 1000 Erdos-Renyi agents ≈ 3000
+fully-connected agents) lives at a scale the paper-figure benches never
+touch — they run N ≤ 40 so RL rollouts fit the CI budget. This bench
+populates the scale axis: a lax.scan-chunked **1024-agent** NetES run
+end-to-end through ``train_rl_netes`` (landscape task, so reward
+evaluation is a cheap batched function and the measured cost is the
+mixing/update path under test), once per physical representation:
+
+* ``dense``     — (N, N) adjacency, masked-matmul backend;
+* ``sparse``    — same ER graph, padded neighbor-list backend;
+* ``circulant`` — same-density circulant-ER, roll-chain backend.
+
+Per representation it reports the measured per-iteration step time and
+the **modeled distributed wire bytes** per chip-step at production scale
+(``benchmarks/perfmodel.py``) — the metric sparse topologies are judged
+on (DESIGN.md §3/§8). Dense and sparse run the SAME graph and seeds, so
+their eval traces must agree — an end-to-end representation parity check
+at N = 1024.
+
+Two satellite legs make this the one path that exercises every layer the
+topology travels through:
+
+* ``fleet.replica_step`` — a nano-LM replica train step built through
+  ``launch/specs.build_step`` (PairSpec.topo → ``topology_repr``-selected
+  backend inside ``distributed/netes_dist.make_replica_train_step``);
+* ``fleet.sparse_kernel`` — the Pallas sparse-mixing kernel
+  (``kernels/netes_sparse_mixing``, interpret mode on CPU) against the
+  jnp reference on an ER slice of the fleet's density.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology, topology_repr
+from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
+from repro.train.loop import TrainConfig, build_topology, train_rl_netes
+
+from . import common, perfmodel, registry
+
+N_FLEET = 1024
+P_FLEET = 0.1        # the paper's sparse regime (Fig. 2B / Fig. 5)
+
+# (family, representation): dense and sparse share the ER graph so their
+# runs are bit-comparable; circulant needs the vertex-transitive family.
+REPRESENTATIONS = [
+    ("erdos_renyi", "dense"),
+    ("erdos_renyi", "sparse"),
+    ("circulant_erdos_renyi", "circulant"),
+]
+
+
+def _fan_in(topo: topology_repr.Topology) -> int:
+    """Per-agent distributed fetch count of the representation's wire
+    format: K_max neighbor fetches (sparse), |±Δ| ppermute hops
+    (circulant), full all-gather (dense)."""
+    if topo.kind == "sparse":
+        return topo.k_max
+    if topo.kind == "circulant":
+        return len(topology_repr.signed_offsets(topo.offsets, topo.n))
+    return topo.n
+
+
+def fleet_netes(quick: bool = False):
+    """The 1024-agent end-to-end runs. Returns [Entry]."""
+    iters = 6 if quick else 24
+    chunk = max(1, iters // 2)
+    entries = []
+    finals = {}
+    for family, rep in REPRESENTATIONS:
+        tc = TrainConfig(
+            n_agents=N_FLEET, iters=iters,
+            topology=TopologySpec(family=family, n_agents=N_FLEET,
+                                  p=P_FLEET, seed=0),
+            representation=rep, seed=0,
+            eval_every=chunk, eval_episodes=4,
+            netes=NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8))
+        topo = build_topology(tc)
+        assert topo.kind == rep, (topo.kind, rep)
+        # Warm-up at iters=chunk compiles the SAME lax.scan (one chunk,
+        # one eval) the timed run replays, so the gated step time is
+        # steady-state — first-jit of the 1024-agent scan is tens of
+        # seconds and would otherwise dominate (and flap ±30%) at ci
+        # scale.
+        train_rl_netes("landscape:rastrigin",
+                       dataclasses.replace(tc, iters=chunk))
+        hist = train_rl_netes("landscape:rastrigin", tc)
+        step_s = hist["wall_s"] / iters
+        fan_in = _fan_in(topo)
+        wire = perfmodel.wire_bytes(N_FLEET, fan_in, rep)
+        finals[rep] = hist["final_eval"]
+        common.emit(
+            f"fleet.netes{N_FLEET}.{rep}", step_s,
+            f"fan_in={fan_in} wire_mb={wire / 2 ** 20:.0f} "
+            f"final={hist['final_eval']:.2f}")
+        entries.append(registry.Entry(
+            name=f"fleet.netes{N_FLEET}.{rep}",
+            wall_s=step_s,
+            wire_bytes=wire,
+            eval_score=hist["final_eval"],
+            extra={"n": N_FLEET, "p": P_FLEET, "iters": iters,
+                   "family": family, "fan_in": fan_in,
+                   "total_wall_s": hist["wall_s"],
+                   "max_eval": hist["max_eval"],
+                   "model_step_us": perfmodel.modeled_step_us(
+                       N_FLEET, fan_in, rep)}))
+    # representation parity at N=1024: same graph + seeds ⇒ same training
+    # trajectory for the dense and sparse backends.
+    assert abs(finals["dense"] - finals["sparse"]) <= \
+        1e-3 * max(1.0, abs(finals["dense"])), finals
+    return entries
+
+
+def replica_step(quick: bool = False):
+    """Nano-LM replica step built via launch/specs with a PairSpec.topo —
+    the full launch-layer topology path at fleet-bench cost."""
+    from repro.configs import get_config
+    from repro.data import make_batch
+    from repro.launch import specs
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer
+
+    cfg = dataclasses.replace(
+        get_config("mistral-nemo-12b-smoke"), name="fleet-nano",
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128)
+    n = 16
+    topo_spec = TopologySpec(family="erdos_renyi", n_agents=n, p=0.15,
+                             seed=0)
+    pair = specs.PairSpec(arch=cfg.name, shape_name="fleet_nano",
+                          mode="replica", kind="train", cfg=cfg,
+                          n_agents=n, topo=topo_spec)
+    topo = topology_repr.from_spec(topo_spec)
+    step, _order = specs.build_step(pair, make_host_mesh())
+    step = jax.jit(step)
+
+    key = jax.random.PRNGKey(0)
+    p0 = transformer.init_params(key, cfg)
+    params = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), p0)
+    adj = topo.to_dense()    # step closes over topo; adj keeps the API
+    batch = make_batch(cfg, dict(seq_len=64, global_batch=n), key)
+    batch = jax.tree.map(lambda x: x.reshape((n, 1) + x.shape[1:]), batch)
+
+    n_steps = 2 if quick else 4
+    params, m = step(params, adj, batch, jax.random.fold_in(key, 0))
+    jax.block_until_ready(m["loss_mean"])          # compile + first step
+    t0 = time.time()
+    for it in range(1, n_steps):
+        params, m = step(params, adj, batch, jax.random.fold_in(key, it))
+    loss = float(jax.block_until_ready(m["loss_mean"]))
+    step_s = (time.time() - t0) / max(1, n_steps - 1)
+
+    fan_in = _fan_in(topo)
+    wire = perfmodel.wire_bytes(n, fan_in, topo.kind)
+    common.emit(f"fleet.replica_step.{topo.kind}", step_s,
+                f"n={n} loss={loss:.3f}")
+    return [registry.Entry(
+        name="fleet.replica_step",
+        wall_s=step_s,
+        wire_bytes=wire,
+        eval_score=-loss,
+        extra={"n": n, "representation": topo.kind, "fan_in": fan_in,
+               "arch": "fleet-nano"})]
+
+
+def sparse_kernel(quick: bool = False):
+    """Pallas sparse-mixing kernel (interpret mode) vs jnp ref on an ER
+    slice at the fleet density; gated via eval_score (1 pass / 0 fail)."""
+    from repro.kernels import ref
+    from repro.kernels import netes_sparse_mixing as nsm
+
+    n, d = 32, 128
+    rng = np.random.default_rng(0)
+    adj = np.asarray(topology.erdos_renyi(n, p=P_FLEET, seed=0))
+    idx, mask = topology_repr.sparse_neighbors(adj)
+    wt = jnp.asarray(rng.normal(size=n), jnp.float32)
+    th = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    ep = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    t0 = time.time()
+    out_k = jax.block_until_ready(
+        nsm.netes_sparse_mixing(jnp.asarray(idx), jnp.asarray(mask),
+                                wt, wt, th, ep, sigma=0.1))
+    dt = time.time() - t0
+    out_r = ref.netes_mixing_ref(jnp.asarray(adj), wt, wt, th, ep,
+                                 sigma=0.1)
+    ok = bool(jnp.allclose(out_k, out_r, rtol=1e-4, atol=1e-4))
+    common.emit("fleet.sparse_kernel", dt, f"n={n} allclose={ok}")
+    return [registry.Entry(
+        name="fleet.sparse_kernel", eval_score=float(ok),
+        extra={"n": n, "d": d, "k_max": int(idx.shape[1])})]
+
+
+def run(quick: bool = False):
+    return (fleet_netes(quick=quick) + replica_step(quick=quick)
+            + sparse_kernel(quick=quick))
+
+
+@registry.register("fleet", group="fleet")
+def bench(ctx: registry.Context):
+    return run(quick=ctx.quick)

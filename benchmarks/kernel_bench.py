@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.kernels import ref
 
-from . import common
+from . import common, perfmodel, registry
 
 
 def _time(fn, *args, iters=5):
@@ -36,36 +36,10 @@ def _time(fn, *args, iters=5):
 # ---------------------------------------------------------------------------
 # dense-vs-sparse crossover (ISSUE 1 acceptance table)
 # ---------------------------------------------------------------------------
-
-# Production-target model constants (v5e-class chip, documented in
-# DESIGN.md §3): the distributed mixing moves each agent's D-float shard
-# over ICI — dense as one (N−1)·D·4B all-gather, sparse as K_max routed
-# neighbor fetches, circulant as |±Δ| ppermute hops — then contracts
-# locally (dense on the MXU, sparse/circulant on the VPU, ~50× worse per
-# flop; sparsity wins on WIRE BYTES, not arithmetic). The all-gather is a
-# fully-pipelined ring schedule at near-peak link utilization; an
-# arbitrary neighbor set has no static schedule, so its transfers contend
-# for links at ~1/_GATHER_CONTENTION of ring throughput — THIS is what
-# puts the crossover at K ≈ N/3 (≈ the SPARSE_DENSITY_CUTOFF heuristic)
-# rather than the no-crossover K < N−1 a pure byte count would give.
-_ICI_BW = 9.0e10          # bytes/s per link (ring-collective effective)
-_GATHER_CONTENTION = 3.0  # unscheduled neighbor-fetch bandwidth derating
-_HOP_LAT = 2.0e-6         # s per routed transfer / permute hop
-_MXU_FLOPS = 2.0e14       # f32 matmul units
-_VPU_FLOPS = 4.0e12       # vector units (gather + fma path)
-_D_PROD = 1 << 20         # per-agent parameter floats at production scale
-
-
-def _modeled_step_us(n: int, fan_in: int, kind: str) -> float:
-    d = _D_PROD
-    if kind == "dense":
-        comm = _HOP_LAT + (n - 1) * d * 4 / _ICI_BW
-        comp = 2 * n * d / _MXU_FLOPS
-    else:
-        comm = (fan_in * _HOP_LAT
-                + fan_in * d * 4 * _GATHER_CONTENTION / _ICI_BW)
-        comp = 2 * fan_in * d / _VPU_FLOPS
-    return (comm + comp) * 1e6
+# The production-target model constants live in benchmarks/perfmodel.py
+# (shared with fleet_bench); see that module and DESIGN.md §3/§8 for why
+# the winner is judged on the modeled distributed step (wire bytes), not
+# host wall-time.
 
 
 def sparse_crossover(quick: bool = False):
@@ -117,8 +91,8 @@ def sparse_crossover(quick: bool = False):
             dt_circ = _time(mix_j, t_circ, th, pe, sh, iters=iters)
 
             k_max = t_sparse.k_max
-            m_dense = _modeled_step_us(n, n, "dense")
-            m_sparse = _modeled_step_us(n, k_max, "sparse")
+            m_dense = perfmodel.modeled_step_us(n, n, "dense")
+            m_sparse = perfmodel.modeled_step_us(n, k_max, "sparse")
             winner = "sparse" if m_sparse < m_dense else "dense"
             table.append((n, p, k_max, dt_dense, dt_sparse, dt_circ,
                           m_dense, m_sparse, winner))
@@ -143,6 +117,7 @@ def sparse_crossover(quick: bool = False):
 
 
 def run(quick: bool = False):
+    entries = []
     rng = np.random.default_rng(0)
     s = 256 if quick else 1024
 
@@ -154,6 +129,9 @@ def run(quick: bool = False):
                q, k, v)
     flops = 4 * s * s * 8 * 64 / 2  # causal half
     common.emit("kernel.attn_ref", dt, f"S={s} gflops/s={flops / dt / 1e9:.1f}")
+    entries.append(registry.Entry(
+        name="kernel.attn_ref", wall_s=dt,
+        extra={"S": s, "gflops_per_s": flops / dt / 1e9}))
 
     # netes mixing ref
     n, p = 64, 1 << 16
@@ -165,12 +143,17 @@ def run(quick: bool = False):
                adj, wt, wt, th, ep)
     common.emit("kernel.netes_mixing_ref", dt,
                 f"N={n} P={p} gb/s={(3 * n * p * 4) / dt / 1e9:.1f}")
+    entries.append(registry.Entry(
+        name="kernel.netes_mixing_ref", wall_s=dt,
+        extra={"N": n, "P": p, "gb_per_s": (3 * n * p * 4) / dt / 1e9}))
 
     # mamba scan ref
     dec = jnp.asarray(rng.uniform(0.9, 0.999, (1, s, 128, 16)), jnp.float32)
     drv = jnp.asarray(rng.normal(size=(1, s, 128, 16)), jnp.float32)
     dt = _time(jax.jit(ref.mamba_scan_ref), dec, drv)
     common.emit("kernel.mamba_scan_ref", dt, f"S={s} d=128 n=16")
+    entries.append(registry.Entry(name="kernel.mamba_scan_ref", wall_s=dt,
+                                  extra={"S": s}))
 
     # rwkv ref
     r = jnp.asarray(rng.normal(size=(1, s, 4, 64)), jnp.float32)
@@ -178,8 +161,11 @@ def run(quick: bool = False):
     u = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
     dt = _time(jax.jit(lambda *a: ref.rwkv6_wkv_ref(*a)[0]), r, r, r, w, u)
     common.emit("kernel.rwkv6_wkv_ref", dt, f"S={s} H=4 n=64")
+    entries.append(registry.Entry(name="kernel.rwkv6_wkv_ref", wall_s=dt,
+                                  extra={"S": s}))
 
-    # interpret-mode correctness pulse (tiny shapes)
+    # interpret-mode correctness pulse (tiny shapes); gated via eval_score
+    # (1.0 pass / 0.0 fail — one-sided compare catches a parity break)
     from repro.core import topology_repr
     from repro.kernels import netes_mixing as nm
     from repro.kernels import netes_sparse_mixing as nsm
@@ -189,6 +175,8 @@ def run(quick: bool = False):
                                  ep[:8, :256], sigma=0.1)
     ok = bool(jnp.allclose(out_k, out_r, rtol=1e-4, atol=1e-4))
     common.emit("kernel.pallas_interpret_check", 0.0, f"allclose={ok}")
+    entries.append(registry.Entry(name="kernel.pallas_interpret_check",
+                                  eval_score=float(ok)))
 
     idx8, mask8 = topology_repr.sparse_neighbors(np.asarray(adj[:8, :8]))
     out_sk = nsm.netes_sparse_mixing(jnp.asarray(idx8), jnp.asarray(mask8),
@@ -197,10 +185,24 @@ def run(quick: bool = False):
     ok = bool(jnp.allclose(out_sk, out_r, rtol=1e-4, atol=1e-4))
     common.emit("kernel.pallas_sparse_interpret_check", 0.0,
                 f"allclose={ok}")
+    entries.append(registry.Entry(
+        name="kernel.pallas_sparse_interpret_check", eval_score=float(ok)))
 
-    sparse_crossover(quick=quick)
-    return True
+    for (n_, p_, k_max, dt_dense, dt_sparse, dt_circ, m_dense, m_sparse,
+         winner) in sparse_crossover(quick=quick):
+        entries.append(registry.Entry(
+            name=f"kernel.crossover.n{n_}_p{p_}",
+            wall_s=dt_dense,
+            # gated metric: modeled per-chip bytes of the SPARSE backend —
+            # exact, machine-independent (DESIGN.md §8)
+            wire_bytes=perfmodel.wire_bytes(n_, k_max, "sparse"),
+            extra={"k_max": k_max, "sparse_ms": dt_sparse * 1e3,
+                   "circulant_ms": dt_circ * 1e3,
+                   "model_dense_us": m_dense, "model_sparse_us": m_sparse,
+                   "winner": winner}))
+    return entries
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("kernels", group="kernels")
+def bench(ctx: registry.Context):
+    return run(quick=ctx.quick)

@@ -22,7 +22,7 @@ from repro.data import make_batch
 from repro.distributed.netes_dist import _agent_keys, perturb_params
 from repro.models import transformer
 
-from . import common
+from . import common, registry
 
 
 def _nano():
@@ -77,11 +77,21 @@ def run(quick: bool = False):
     er, fc = rows["erdos_renyi"]["cos_mean"], \
         rows["fully_connected"]["cos_mean"]
     ok = er < 0 and fc < 0       # both anti-aligned with ∇loss
-    common.emit("lm_netes.alignment", time.time() - t0,
+    rows["wall_s"] = time.time() - t0
+    common.emit("lm_netes.alignment", rows["wall_s"],
                 f"er_cos={er:.4f} fc_cos={fc:.4f} both_descend={ok}")
     common.save_result("lm_netes", rows)
     return rows
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("lm", group="topologies", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    rows = run(quick=ctx.quick)
+    # eval_score: NEGATED ER-masked cosine with ∇loss — the estimator
+    # descends iff cos < 0, so higher (more anti-aligned) is better.
+    return [registry.Entry(
+        name="lm_netes.alignment",
+        wall_s=rows["wall_s"],
+        eval_score=-rows["erdos_renyi"]["cos_mean"],
+        extra={"fc_cos": rows["fully_connected"]["cos_mean"],
+               "er_cos": rows["erdos_renyi"]["cos_mean"]})]

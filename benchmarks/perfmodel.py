@@ -1,0 +1,56 @@
+"""Production-target distributed step model, shared by kernel_bench's
+crossover table and fleet_bench's scale axis.
+
+Constants model a v5e-class chip (documented in DESIGN.md §3): the
+distributed mixing moves each agent's D-float shard over ICI — dense as
+one (N−1)·D·4B all-gather, sparse as K_max routed neighbor fetches,
+circulant as |±Δ| ppermute hops — then contracts locally (dense on the
+MXU, sparse/circulant on the VPU, ~50× worse per flop; sparsity wins on
+WIRE BYTES, not arithmetic). The all-gather is a fully-pipelined ring
+schedule at near-peak link utilization; an arbitrary neighbor set has no
+static schedule, so its transfers contend for links at
+~1/``GATHER_CONTENTION`` of ring throughput — THIS is what puts the
+crossover at K ≈ N/3 (≈ the SPARSE_DENSITY_CUTOFF heuristic) rather than
+the no-crossover K < N−1 a pure byte count would give.
+
+``wire_bytes`` is the regression-gated metric (DESIGN.md §8): a
+deterministic function of the topology alone, comparable across any two
+machines — unlike wall-times.
+"""
+from __future__ import annotations
+
+ICI_BW = 9.0e10          # bytes/s per link (ring-collective effective)
+GATHER_CONTENTION = 3.0  # unscheduled neighbor-fetch bandwidth derating
+HOP_LAT = 2.0e-6         # s per routed transfer / permute hop
+MXU_FLOPS = 2.0e14       # f32 matmul units
+VPU_FLOPS = 4.0e12       # vector units (gather + fma path)
+D_PROD = 1 << 20         # per-agent parameter floats at production scale
+
+
+def wire_bytes(n: int, fan_in: int, kind: str, d: int = D_PROD) -> int:
+    """Per-chip collective bytes of one distributed mixing step.
+
+    ``fan_in``: K_max for sparse, |±Δ| signed-offset count for circulant,
+    ignored for dense (which always moves the full (N−1)·D all-gather).
+    """
+    if kind == "dense":
+        return (n - 1) * d * 4
+    return fan_in * d * 4
+
+
+def modeled_step_us(n: int, fan_in: int, kind: str, d: int = D_PROD) -> float:
+    """Modeled production step time (µs) — comm + local contraction.
+
+    Circulant ppermute chains are statically scheduled ring rotations, so
+    unlike arbitrary sparse neighbor sets they pay no contention derating
+    (DESIGN.md §2).
+    """
+    if kind == "dense":
+        comm = HOP_LAT + wire_bytes(n, fan_in, "dense", d) / ICI_BW
+        comp = 2 * n * d / MXU_FLOPS
+    else:
+        contention = 1.0 if kind == "circulant" else GATHER_CONTENTION
+        comm = (fan_in * HOP_LAT
+                + wire_bytes(n, fan_in, kind, d) * contention / ICI_BW)
+        comp = 2 * fan_in * d / VPU_FLOPS
+    return (comm + comp) * 1e6

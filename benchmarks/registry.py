@@ -1,0 +1,267 @@
+"""Benchmark registry — one catalogue, one CLI, one artifact schema.
+
+Every benchmark in this package registers itself here (``@register``)
+instead of hand-rolling a ``__main__``; ``benchmarks/run.py`` is the only
+entry point. A registered benchmark is a function ``fn(ctx) -> [Entry]``
+tagged with an artifact *group* and the *profiles* that include it:
+
+* groups  — which ``BENCH_<group>.json`` artifact its entries land in:
+  ``topologies`` (paper figures/tables), ``kernels`` (micro-benches +
+  roofline), ``fleet`` (the N≈1000 scale axis).
+* profiles — ``ci`` (deterministic + fast, ≤5 min on a CI runner, the
+  regression-gated set), ``quick`` (everything at smoke scale), ``full``
+  (everything at paper-reduced scale).
+
+Artifacts are schema-versioned (``SCHEMA_VERSION``) and carry environment
+metadata so ``check_regression.py`` can decide which metrics are
+comparable across machines (wire bytes always; wall-times only on like
+hardware — DESIGN.md §8). Per-entry metrics:
+
+* ``wall_s``     — measured wall-time of the entry's subject (seconds);
+* ``wire_bytes`` — modeled per-chip collective bytes of one distributed
+  step at production scale (deterministic function of the topology —
+  the metric sparse representations are judged on, DESIGN.md §3/§8);
+* ``eval_score`` — the entry's quality metric, ALWAYS higher-is-better
+  (negate error metrics before storing);
+* ``extra``      — free-form diagnostics, never gated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import platform
+import sys
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+GROUPS = ("topologies", "kernels", "fleet")
+PROFILES = ("ci", "quick", "full")
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@dataclasses.dataclass
+class Entry:
+    """One gated result row (see module docstring for metric semantics)."""
+
+    name: str
+    wall_s: Optional[float] = None
+    wire_bytes: Optional[int] = None
+    eval_score: Optional[float] = None
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"wall_s": self.wall_s, "wire_bytes": self.wire_bytes,
+                "eval_score": self.eval_score, "extra": self.extra}
+
+
+@dataclasses.dataclass(frozen=True)
+class Benchmark:
+    name: str
+    group: str
+    fn: Callable[["Context"], Iterable[Entry]]
+    profiles: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Context:
+    """Run-scoped knobs handed to every benchmark fn."""
+
+    profile: str
+    out_dir: pathlib.Path
+
+    @property
+    def quick(self) -> bool:
+        """Smoke scale? (``full`` is the only paper-reduced-scale profile —
+        ``ci`` must fit the 5-minute gate, so it runs quick scales too.)"""
+        return self.profile != "full"
+
+    def results_dir(self) -> pathlib.Path:
+        """Where per-suite science payloads (non-gated JSON/markdown) go."""
+        return self.out_dir / "results"
+
+
+_REGISTRY: Dict[str, Benchmark] = {}
+
+
+def register(name: str, group: str, profiles: Tuple[str, ...] = PROFILES):
+    """Decorator: register ``fn(ctx) -> [Entry]`` under ``name``."""
+    if group not in GROUPS:
+        raise ValueError(f"unknown group {group!r}; expected one of {GROUPS}")
+    unknown = set(profiles) - set(PROFILES)
+    if unknown:
+        raise ValueError(f"unknown profiles {sorted(unknown)}")
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"benchmark {name!r} registered twice")
+        _REGISTRY[name] = Benchmark(name=name, group=group, fn=fn,
+                                    profiles=tuple(profiles))
+        return fn
+
+    return deco
+
+
+def registered() -> Dict[str, Benchmark]:
+    return dict(_REGISTRY)
+
+
+def select(profile: str, only: Optional[Iterable[str]] = None
+           ) -> List[Benchmark]:
+    if only is not None:
+        missing = [n for n in only if n not in _REGISTRY]
+        if missing:
+            raise KeyError(f"unknown benchmarks {missing}; "
+                           f"registered: {sorted(_REGISTRY)}")
+        return [_REGISTRY[n] for n in only]
+    return [b for b in _REGISTRY.values() if profile in b.profiles]
+
+
+# ---------------------------------------------------------------------------
+# environment metadata
+# ---------------------------------------------------------------------------
+
+def _cpu_model() -> str:
+    try:
+        for line in pathlib.Path("/proc/cpuinfo").read_text().splitlines():
+            if line.lower().startswith("model name"):
+                return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    # NOT platform.machine(): a bare arch string ("x86_64"/"aarch64")
+    # would spuriously match across genuinely different machines and arm
+    # check_regression's fatal wall gate — "unknown" never matches.
+    return "unknown"
+
+
+def environment_metadata() -> Dict[str, Any]:
+    """Recorded into every artifact; ``cpu`` decides wall-time
+    comparability in check_regression (DESIGN.md §8)."""
+    import jax
+    import numpy as np
+    return {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "platform": platform.platform(),
+        "cpu": _cpu_model(),
+        "device_kind": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# artifact IO
+# ---------------------------------------------------------------------------
+
+def artifact_path(out_dir: pathlib.Path, group: str) -> pathlib.Path:
+    return pathlib.Path(out_dir) / f"BENCH_{group}.json"
+
+
+def write_artifacts(out_dir: pathlib.Path, profile: str,
+                    results: Dict[str, Dict[str, List[Entry]]],
+                    total_wall_s: float) -> List[pathlib.Path]:
+    """``results[group][bench_name] -> [Entry]`` → BENCH_<group>.json.
+
+    Every group file is always written (empty ``entries`` when no
+    registered benchmark produced rows) so consumers can rely on all
+    three artifacts existing.
+    """
+    out_dir = pathlib.Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    env = environment_metadata()
+    written = []
+    for group in GROUPS:
+        entries: Dict[str, Any] = {}
+        benches = sorted(results.get(group, {}))
+        for bench_name in benches:
+            for e in results[group][bench_name]:
+                if e.name in entries:
+                    raise ValueError(
+                        f"duplicate entry name {e.name!r} in group {group}")
+                entries[e.name] = e.to_json()
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "group": group,
+            "profile": profile,
+            "env": env,
+            "generated_unix": time.time(),
+            "total_wall_s": total_wall_s,
+            "benchmarks": benches,
+            "entries": entries,
+        }
+        path = artifact_path(out_dir, group)
+        path.write_text(json.dumps(payload, indent=2, sort_keys=True,
+                                   default=_json_default) + "\n")
+        written.append(path)
+    return written
+
+
+def _json_default(obj):
+    """numpy scalars (and anything else stray) in ``extra`` payloads."""
+    try:
+        return float(obj)
+    except (TypeError, ValueError):
+        return str(obj)
+
+
+def load_artifact(path: pathlib.Path) -> Dict[str, Any]:
+    return json.loads(pathlib.Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run_profile(profile: str, out_dir: pathlib.Path,
+                only: Optional[Iterable[str]] = None,
+                ) -> Tuple[Dict[str, Dict[str, List[Entry]]], int]:
+    """Run the selected benchmarks, write artifacts, return (results,
+    failure count). A failing benchmark is recorded (entry ``<name>.error``
+    with the exception in ``extra``) and does not abort the run."""
+    import traceback
+
+    import jax
+
+    from benchmarks import common
+
+    ctx = Context(profile=profile, out_dir=pathlib.Path(out_dir))
+    common.set_results_dir(ctx.results_dir())
+    benches = select(profile, only)
+    results: Dict[str, Dict[str, List[Entry]]] = {g: {} for g in GROUPS}
+    seen: Dict[str, str] = {}          # entry name -> benchmark that owns it
+    failures = 0
+    t_run = time.time()
+    for b in benches:
+        t0 = time.time()
+        try:
+            entries = list(b.fn(ctx))
+        except Exception as e:                            # noqa: BLE001
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            entries = [Entry(name=f"{b.name}.error",
+                             extra={"error": f"{type(e).__name__}: {e}"})]
+        # Entry names must be unique per group (they key the artifact
+        # dict). A collision is a benchmark bug, but it must not crash
+        # write_artifacts AFTER the whole run's work is done — degrade
+        # the duplicate to an error entry and fail the run's exit code.
+        deduped = []
+        for i, e in enumerate(entries):
+            key = f"{b.group}/{e.name}"
+            if key in seen:
+                failures += 1
+                print(f"duplicate entry name {e.name!r} from {b.name} "
+                      f"(already emitted by {seen[key]})", file=sys.stderr)
+                e = Entry(name=f"{b.name}.duplicate.{i}",
+                          extra={"error": f"duplicate entry name "
+                                          f"{e.name!r}"})
+            seen[f"{b.group}/{e.name}"] = b.name
+            deduped.append(e)
+        jax.clear_caches()          # 1-core box: bound jit-cache RAM
+        dt = time.time() - t0
+        common.emit(f"suite.{b.name}", dt, f"entries={len(deduped)}")
+        results[b.group][b.name] = deduped
+    write_artifacts(out_dir, profile, results, time.time() - t_run)
+    return results, failures

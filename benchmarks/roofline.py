@@ -1,7 +1,8 @@
 """§Roofline report generator: reads the dry-run JSONs (lower+compile
-artifacts) and emits the per-(arch × shape × mesh) roofline table —
-compute/memory/collective terms, dominant bottleneck, MODEL_FLOPS ratio —
-as CSV + a markdown table for EXPERIMENTS.md.
+artifacts, repo-anchored ``experiments/dryrun``) and emits the
+per-(arch × shape × mesh) roofline table — compute/memory/collective
+terms, dominant bottleneck, MODEL_FLOPS ratio — as CSV + markdown tables
+under the run's ``--out-dir`` (a no-op when no dry-run artifacts exist).
 """
 from __future__ import annotations
 
@@ -10,8 +11,12 @@ import pathlib
 import time
 from typing import Dict, List
 
-DRYRUN_DIR = pathlib.Path("experiments/dryrun")
-OUT_MD = pathlib.Path("experiments/roofline_table.md")
+from . import common, registry
+
+# Dry-run artifacts are produced by repro.launch.dryrun into the repo
+# tree; reads are anchored there (not the CWD). Output tables go to the
+# run's --out-dir (registry Context) like every other writer.
+DRYRUN_DIR = common.REPO_ROOT / "experiments" / "dryrun"
 
 
 def load_results(mesh: str = "16x16") -> List[Dict]:
@@ -44,8 +49,9 @@ def to_markdown(rows: List[Dict]) -> str:
     return "".join(lines)
 
 
-def run(quick: bool = False):
+def run(out_dir: pathlib.Path, quick: bool = False):
     t0 = time.time()
+    entries = []
     variants = [("", DRYRUN_DIR)]
     opt = DRYRUN_DIR.with_name("dryrun_optimized")
     if opt.exists():
@@ -60,7 +66,7 @@ def run(quick: bool = False):
             if not rows:
                 continue
             md = to_markdown(rows)
-            out = OUT_MD.with_name(f"roofline_table_{mesh}{suffix}.md")
+            out = pathlib.Path(out_dir) / f"roofline_table_{mesh}{suffix}.md"
             out.parent.mkdir(parents=True, exist_ok=True)
             tag = "post-§Perf" if suffix else "baseline"
             out.write_text(f"## Roofline — mesh {mesh} ({tag})\n\n{md}")
@@ -68,10 +74,14 @@ def run(quick: bool = False):
             for d in rows:
                 bounds[d["roofline"]["dominant"]] = \
                     bounds.get(d["roofline"]["dominant"], 0) + 1
-            print(f"roofline.{mesh}{suffix},{(time.time() - t0) * 1e6:.0f},"
-                  f"pairs={len(rows)} bounds={bounds}")
-    return True
+            common.emit(f"roofline.{mesh}{suffix}", time.time() - t0,
+                        f"pairs={len(rows)} bounds={bounds}")
+            entries.append(registry.Entry(
+                name=f"roofline.{mesh}{suffix}",
+                extra={"pairs": len(rows), "bounds": bounds}))
+    return entries
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("roofline", group="kernels", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    return run(ctx.results_dir(), quick=ctx.quick)

@@ -1,66 +1,74 @@
-"""Benchmark orchestrator — one harness per paper table/figure (+ roofline
-and kernel micro-benches). Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator — the only entry point for every registered
+benchmark (paper tables/figures, kernel micro-benches, roofline, the
+1024-agent fleet axis). Prints ``name,us_per_call,derived`` CSV to stdout
+and writes the schema-versioned ``BENCH_topologies.json`` /
+``BENCH_kernels.json`` / ``BENCH_fleet.json`` artifacts to ``--out-dir``.
 
-  python -m benchmarks.run            # full (reduced-scale) suite
-  python -m benchmarks.run --quick    # smoke-scale
-  python -m benchmarks.run --only table1,fig5
+  python benchmarks/run.py --profile ci            # regression-gated set
+  python benchmarks/run.py --profile quick         # everything, smoke scale
+  python benchmarks/run.py --profile full          # paper-reduced scale
+  python benchmarks/run.py --only table1,fig5      # by name, any profile
+
+Gate a run against the committed baselines with
+``python benchmarks/check_regression.py --candidate <out-dir>``.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
-
-import jax
 import time
-import traceback
 
-from . import (fig2a_families, fig2b_size_sweep, fig3a_broadcast,
-               fig3b_controls, fig3c_reach_homog, fig4_approx, fig5_density,
-               kernel_bench, lm_netes, roofline, table1_er_vs_fc)
+# Make both `python benchmarks/run.py` and `python -m benchmarks.run`
+# work without PYTHONPATH massaging: the repo root provides the
+# `benchmarks` package, `src` provides `repro`.
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-SUITES = {
-    "fig3c": fig3c_reach_homog,
-    "fig4": fig4_approx,
-    "kernels": kernel_bench,
-    "fig2a": fig2a_families,
-    "table1": table1_er_vs_fc,
-    "fig2b": fig2b_size_sweep,
-    "fig3a": fig3a_broadcast,
-    "fig3b": fig3b_controls,
-    "fig5": fig5_density,
-    "lm": lm_netes,
-    "roofline": roofline,
-}
+import importlib                                              # noqa: E402
+
+from benchmarks import registry                               # noqa: E402
+
+# Importing the suite modules populates the registry.
+for _mod in ("fig2a_families", "fig2b_size_sweep", "fig3a_broadcast",
+             "fig3b_controls", "fig3c_reach_homog", "fig4_approx",
+             "fig5_density", "fleet_bench", "kernel_bench", "lm_netes",
+             "roofline", "table1_er_vs_fc"):
+    importlib.import_module(f"benchmarks.{_mod}")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", choices=registry.PROFILES, default="full")
     ap.add_argument("--only", default=None,
-                    help="comma-separated suite names")
-    args = ap.parse_args()
-    names = list(SUITES) if not args.only else args.only.split(",")
+                    help="comma-separated benchmark names (overrides the "
+                         "profile's selection; scales still follow "
+                         "--profile)")
+    ap.add_argument("--out-dir", default=_ROOT / "bench-out",
+                    type=pathlib.Path,
+                    help="where BENCH_*.json (and results/) are written "
+                         "(default: <repo>/bench-out, gitignored — never "
+                         "the CWD)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered benchmarks and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for b in registry.registered().values():
+            print(f"{b.name:<10} group={b.group:<11} "
+                  f"profiles={','.join(b.profiles)}")
+        return 0
+
+    only = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
-    failures = 0
     t0 = time.time()
-    for name in names:
-        mod = SUITES[name]
-        try:
-            mod.run(quick=args.quick)
-            jax.clear_caches()          # 1-core box: bound jit-cache RAM
-        except Exception as e:                            # noqa: BLE001
-            failures += 1
-            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
-            traceback.print_exc(file=sys.stderr)
+    _, failures = registry.run_profile(args.profile, args.out_dir, only=only)
     print(f"total,{(time.time() - t0) * 1e6:.0f},"
-          f"suites={len(names)} failures={failures}")
-    sys.exit(1 if failures else 0)
-
-
-def run(quick: bool = False):                             # for tests
-    for mod in SUITES.values():
-        mod.run(quick=quick)
+          f"profile={args.profile} failures={failures}")
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

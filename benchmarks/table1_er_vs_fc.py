@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import time
 
-from . import common
+from . import common, registry
 
 TASKS = ["pendulum", "cartpole_swingup", "acrobot",
          "landscape:rastrigin@2.5", "landscape:ackley@2.5"]
@@ -28,12 +28,22 @@ def run(quick: bool = False):
         rows[task] = {"fully_connected": fc, "erdos_renyi": er,
                       "improvement_pct": improv,
                       "fc_ci": res["fully_connected"]["ci95"],
-                      "er_ci": res["erdos_renyi"]["ci95"]}
-        common.emit(f"table1.{task.replace(':', '_')}", time.time() - t0,
+                      "er_ci": res["erdos_renyi"]["ci95"],
+                      "wall_s": time.time() - t0}
+        common.emit(f"table1.{task.replace(':', '_')}",
+                    rows[task]["wall_s"],
                     f"fc={fc:.2f} er={er:.2f} improv={improv:+.1f}%")
     common.save_result("table1_er_vs_fc", rows)
     return rows
 
 
-if __name__ == "__main__":
-    run()
+@registry.register("table1", group="topologies", profiles=("quick", "full"))
+def bench(ctx: registry.Context):
+    rows = run(quick=ctx.quick)
+    return [registry.Entry(
+        name=f"table1.{task.replace(':', '_')}",
+        wall_s=r["wall_s"],
+        eval_score=r["erdos_renyi"],
+        extra={"fully_connected": r["fully_connected"],
+               "improvement_pct": r["improvement_pct"]})
+        for task, r in rows.items()]

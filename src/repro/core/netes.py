@@ -28,7 +28,6 @@ import jax
 import jax.numpy as jnp
 
 from . import es_utils, topology_repr
-from .topology_repr import Topology
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,9 +26,7 @@ which reduces to standard mirrored ES for fully-connected A and equal θ.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,12 +20,11 @@ subprocess so the single-device test session stays clean).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.topology_repr import Topology, signed_offsets  # noqa: F401
@@ -116,7 +115,12 @@ def make_sparse_gather_mixing(mesh: Mesh, axis: str, topo: Topology):
         j = jax.lax.axis_index(axis)
         full = jax.lax.all_gather(theta, axis, axis=0, tiled=True)  # (N, D)
         cols = idx[j]                                   # (K,)
-        w = weights[j, cols] * mask[j]                  # (K,)
+        # ``weights`` is the full mixing matrix (adj ⊙ R̃) — the edge
+        # weight is already in it, so only the PADDING indicator of
+        # neighbor_mask applies here (the mask carries a_ji itself;
+        # multiplying by it would square the weight on weighted graphs).
+        valid = (mask[j] != 0).astype(weights.dtype)
+        w = weights[j, cols] * valid                    # (K,)
         return (w @ jnp.take(full, cols, axis=0))[None]
 
     return shard_map(local_mix, mesh=mesh,

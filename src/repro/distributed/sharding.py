@@ -32,11 +32,10 @@ Per-tensor rules (feature dims)
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
-import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.tree_util import tree_map_with_path
 
 from repro.configs.base import ModelConfig

@@ -11,7 +11,6 @@ from functools import partial
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from .policy import MLPPolicy
 

@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import os
 
-import jax
-
 from . import flash_attention as _fa
 from . import mamba_scan as _ms
 from . import moe_router as _mr

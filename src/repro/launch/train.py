@@ -10,7 +10,6 @@ LM (NetES over a registry architecture, reduced scale):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import pathlib
 

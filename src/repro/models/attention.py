@@ -13,7 +13,6 @@ Patterns (``kind``):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

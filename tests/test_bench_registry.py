@@ -1,0 +1,100 @@
+"""Registry contract tests: registration rules, profile selection, and
+the schema-versioned artifact roundtrip check_regression relies on."""
+import numpy as np
+import pytest
+
+from benchmarks import registry
+
+
+def test_register_rejects_unknown_group_and_profile():
+    with pytest.raises(ValueError):
+        registry.register("x-bad-group", group="nope")(lambda ctx: [])
+    with pytest.raises(ValueError):
+        registry.register("x-bad-profile", group="fleet",
+                          profiles=("nightly",))(lambda ctx: [])
+
+
+def test_register_rejects_duplicate_name():
+    name = "x-dup-test"
+    registry.register(name, group="fleet")(lambda ctx: [])
+    try:
+        with pytest.raises(ValueError):
+            registry.register(name, group="fleet")(lambda ctx: [])
+    finally:
+        registry._REGISTRY.pop(name, None)
+
+
+def test_select_filters_by_profile_and_validates_only():
+    name = "x-select-test"
+    registry.register(name, group="kernels", profiles=("full",))(
+        lambda ctx: [])
+    try:
+        assert name not in [b.name for b in registry.select("ci")]
+        assert name in [b.name for b in registry.select("full")]
+        # --only overrides profile membership but rejects unknown names
+        assert [b.name for b in registry.select("ci", only=[name])] == [name]
+        with pytest.raises(KeyError):
+            registry.select("ci", only=["no-such-bench"])
+    finally:
+        registry._REGISTRY.pop(name, None)
+
+
+def test_context_quick_semantics():
+    assert registry.Context("ci", ".").quick
+    assert registry.Context("quick", ".").quick
+    assert not registry.Context("full", ".").quick
+
+
+def test_artifact_roundtrip(tmp_path):
+    entries = [registry.Entry(name="a.one", wall_s=1.5, wire_bytes=64,
+                              eval_score=-2.0,
+                              extra={"np_scalar": np.float64(3.5)})]
+    paths = registry.write_artifacts(
+        tmp_path, "ci", {"fleet": {"fleetish": entries}}, total_wall_s=9.0)
+    assert sorted(p.name for p in paths) == [
+        f"BENCH_{g}.json" for g in sorted(registry.GROUPS)]
+    d = registry.load_artifact(registry.artifact_path(tmp_path, "fleet"))
+    assert d["schema_version"] == registry.SCHEMA_VERSION
+    assert d["entries"]["a.one"]["wire_bytes"] == 64
+    assert d["entries"]["a.one"]["extra"]["np_scalar"] == 3.5
+    assert "cpu" in d["env"] and "jax" in d["env"]
+    # groups with no entries still produce (empty) artifacts
+    topo = registry.load_artifact(
+        registry.artifact_path(tmp_path, "topologies"))
+    assert topo["entries"] == {}
+
+
+def test_duplicate_entry_names_rejected(tmp_path):
+    e = [registry.Entry(name="same"), registry.Entry(name="same")]
+    with pytest.raises(ValueError):
+        registry.write_artifacts(tmp_path, "ci", {"fleet": {"b": e}}, 0.0)
+
+
+def test_run_profile_degrades_duplicate_entries(tmp_path):
+    """A cross-benchmark entry-name collision must not crash the final
+    write_artifacts (losing the whole run) — it degrades to an error
+    entry and a non-zero failure count."""
+    registry.register("x-dup-a", group="fleet")(
+        lambda ctx: [registry.Entry(name="same.name", wall_s=1.0)])
+    registry.register("x-dup-b", group="fleet")(
+        lambda ctx: [registry.Entry(name="same.name", wall_s=2.0)])
+    try:
+        results, failures = registry.run_profile(
+            "ci", tmp_path, only=["x-dup-a", "x-dup-b"])
+        assert failures == 1
+        d = registry.load_artifact(registry.artifact_path(tmp_path, "fleet"))
+        assert d["entries"]["same.name"]["wall_s"] == 1.0
+        assert any(k.startswith("x-dup-b.duplicate") for k in d["entries"])
+    finally:
+        registry._REGISTRY.pop("x-dup-a", None)
+        registry._REGISTRY.pop("x-dup-b", None)
+
+
+def test_real_registry_covers_all_groups_in_ci():
+    """The ci profile must populate every artifact group (the acceptance
+    bar: all three BENCH_*.json carry entries, incl. the fleet axis)."""
+    import benchmarks.run  # noqa: F401  (imports register the suites)
+    groups = {b.group for b in registry.select("ci")}
+    assert groups == set(registry.GROUPS)
+    names = {b.name for b in registry.select("ci")}
+    assert "fleet" in names and "kernels" in names

@@ -1,0 +1,257 @@
+"""Regression-checker contract tests (ISSUE 2): synthetic baseline vs
+candidate artifacts covering every gate class — pass, wall-time-tolerance
+pass, wire-bytes fail, missing-entry fail, schema-version mismatch —
+plus the CLI exit codes the CI bench job relies on."""
+import copy
+import json
+
+from benchmarks import check_regression as cr
+from benchmarks import registry
+
+
+def make_artifact(group="fleet", cpu="test-cpu", schema=None, **entries):
+    return {
+        "schema_version": (registry.SCHEMA_VERSION if schema is None
+                           else schema),
+        "group": group,
+        "profile": "ci",
+        "env": {"cpu": cpu},
+        "entries": entries,
+    }
+
+
+def entry(wall_s=None, wire_bytes=None, eval_score=None, **extra):
+    return {"wall_s": wall_s, "wire_bytes": wire_bytes,
+            "eval_score": eval_score, "extra": extra}
+
+
+BASE = make_artifact(
+    dense=entry(wall_s=1.0, wire_bytes=4096, eval_score=-250.0),
+    sparse=entry(wall_s=1.2, wire_bytes=512, eval_score=-250.0),
+)
+
+
+def fatals(findings):
+    return [f for f in findings if f.fatal]
+
+
+def test_identical_passes():
+    assert fatals(cr.compare_artifacts(BASE, copy.deepcopy(BASE))) == []
+
+
+def test_wall_time_within_tolerance_passes():
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["dense"]["wall_s"] = 1.29       # +29% < ±30%
+    assert fatals(cr.compare_artifacts(BASE, cand)) == []
+
+
+def test_wall_time_beyond_tolerance_fails_on_same_cpu():
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["dense"]["wall_s"] = 1.5        # +50%
+    bad = fatals(cr.compare_artifacts(BASE, cand))
+    assert [(f.entry, f.metric) for f in bad] == [("dense", "wall_s")]
+
+
+def test_wall_time_on_different_cpu_is_advisory():
+    cand = copy.deepcopy(BASE)
+    cand["env"]["cpu"] = "other-cpu"
+    cand["entries"]["dense"]["wall_s"] = 10.0
+    findings = cr.compare_artifacts(BASE, cand)
+    assert fatals(findings) == []
+    assert any(f.metric == "wall_s" for f in findings)   # still reported
+
+
+def test_wall_time_improvement_is_noted_not_fatal():
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["dense"]["wall_s"] = 0.5
+    findings = cr.compare_artifacts(BASE, cand)
+    assert fatals(findings) == []
+    assert any("refreshing" in f.message for f in findings)
+
+
+def test_wire_bytes_is_exact():
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["sparse"]["wire_bytes"] = 513
+    bad = fatals(cr.compare_artifacts(BASE, cand))
+    assert [(f.entry, f.metric) for f in bad] == [("sparse", "wire_bytes")]
+
+
+def test_eval_score_one_sided():
+    worse = copy.deepcopy(BASE)
+    worse["entries"]["dense"]["eval_score"] = -280.0    # beyond 5% slack
+    assert [f.metric for f in fatals(cr.compare_artifacts(BASE, worse))] \
+        == ["eval_score"]
+    within = copy.deepcopy(BASE)
+    within["entries"]["dense"]["eval_score"] = -255.0   # within 5% slack
+    assert fatals(cr.compare_artifacts(BASE, within)) == []
+    better = copy.deepcopy(BASE)
+    better["entries"]["dense"]["eval_score"] = -1.0
+    assert fatals(cr.compare_artifacts(BASE, better)) == []
+
+
+def test_missing_entry_fails():
+    cand = copy.deepcopy(BASE)
+    del cand["entries"]["sparse"]
+    bad = fatals(cr.compare_artifacts(BASE, cand))
+    assert [(f.entry, f.metric) for f in bad] == [("sparse", "-")]
+
+
+def test_dropped_metric_fails():
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["sparse"]["wire_bytes"] = None
+    bad = fatals(cr.compare_artifacts(BASE, cand))
+    assert [(f.entry, f.metric) for f in bad] == [("sparse", "wire_bytes")]
+
+
+def test_new_candidate_entry_is_note_only():
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["circulant"] = entry(wall_s=1.0, wire_bytes=100)
+    findings = cr.compare_artifacts(BASE, cand)
+    assert fatals(findings) == []
+    assert any(f.entry == "circulant" for f in findings)
+
+
+def test_schema_version_mismatch_fails():
+    cand = copy.deepcopy(BASE)
+    cand["schema_version"] = registry.SCHEMA_VERSION + 1
+    bad = fatals(cr.compare_artifacts(BASE, cand))
+    assert [f.metric for f in bad] == ["schema_version"]
+
+
+def test_profile_mismatch_fails():
+    cand = copy.deepcopy(BASE)
+    cand["profile"] = "full"
+    bad = fatals(cr.compare_artifacts(BASE, cand))
+    assert [f.metric for f in bad] == ["profile"]
+
+
+# ---------------------------------------------------------------------------
+# CLI / directory-level behavior
+# ---------------------------------------------------------------------------
+
+def _write_dirs(tmp_path, baseline, candidate):
+    b_dir, c_dir = tmp_path / "baseline", tmp_path / "candidate"
+    b_dir.mkdir()
+    c_dir.mkdir()
+    for group in registry.GROUPS:
+        b = dict(baseline, group=group)
+        c = dict(candidate, group=group)
+        registry.artifact_path(b_dir, group).write_text(json.dumps(b))
+        registry.artifact_path(c_dir, group).write_text(json.dumps(c))
+    return b_dir, c_dir
+
+
+def test_cli_exit_codes(tmp_path):
+    b_dir, c_dir = _write_dirs(tmp_path, BASE, copy.deepcopy(BASE))
+    assert cr.main(["--baseline", str(b_dir),
+                    "--candidate", str(c_dir)]) == 0
+
+    bad = copy.deepcopy(BASE)
+    bad["entries"]["sparse"]["wire_bytes"] = 9999
+    sub = tmp_path / "bad"
+    sub.mkdir()
+    b_dir2, c_dir2 = _write_dirs(sub, BASE, bad)
+    assert cr.main(["--baseline", str(b_dir2),
+                    "--candidate", str(c_dir2)]) == 1
+
+
+def test_cli_missing_candidate_artifact_fails(tmp_path):
+    b_dir, c_dir = _write_dirs(tmp_path, BASE, copy.deepcopy(BASE))
+    registry.artifact_path(c_dir, "fleet").unlink()
+    assert cr.main(["--baseline", str(b_dir),
+                    "--candidate", str(c_dir)]) == 1
+
+
+def test_cli_missing_baseline_fails_closed_unless_bootstrap(tmp_path):
+    # baselines are committed: one going missing means silent un-gating
+    b_dir, c_dir = _write_dirs(tmp_path, BASE, copy.deepcopy(BASE))
+    registry.artifact_path(b_dir, "fleet").unlink()
+    args = ["--baseline", str(b_dir), "--candidate", str(c_dir)]
+    assert cr.main(args) == 1
+    assert cr.main(args + ["--bootstrap"]) == 0
+
+
+def test_cli_update_refuses_incomplete_candidate(tmp_path):
+    b_dir, c_dir = _write_dirs(tmp_path, BASE, copy.deepcopy(BASE))
+    before = registry.artifact_path(b_dir, "fleet").read_text()
+    registry.artifact_path(c_dir, "fleet").unlink()
+    assert cr.main(["--baseline", str(b_dir), "--candidate", str(c_dir),
+                    "--update"]) == 1
+    # baselines untouched on refusal
+    assert registry.artifact_path(b_dir, "fleet").read_text() == before
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert cr.main(["--baseline", str(b_dir), "--candidate", str(empty),
+                    "--update"]) == 1
+
+
+def test_cli_update_refuses_shrunken_or_mismatched_candidate(tmp_path):
+    # partial --only runs still write all three files, with empty or
+    # shrunken entry sets — --update must not overwrite baselines
+    b_dir, c_dir = _write_dirs(tmp_path, BASE, copy.deepcopy(BASE))
+    before = registry.artifact_path(b_dir, "fleet").read_text()
+    shrunk = copy.deepcopy(BASE)
+    del shrunk["entries"]["sparse"]
+    registry.artifact_path(c_dir, "fleet").write_text(
+        json.dumps(dict(shrunk, group="fleet")))
+    assert cr.main(["--baseline", str(b_dir), "--candidate", str(c_dir),
+                    "--update"]) == 1
+    assert registry.artifact_path(b_dir, "fleet").read_text() == before
+    # profile switch is likewise refused while baselines exist
+    sub = tmp_path / "prof"
+    sub.mkdir()
+    full = dict(copy.deepcopy(BASE), profile="full")
+    b_dir2, c_dir2 = _write_dirs(sub, BASE, full)
+    assert cr.main(["--baseline", str(b_dir2), "--candidate", str(c_dir2),
+                    "--update"]) == 1
+
+
+def test_cli_update_refuses_failed_run_entries(tmp_path):
+    # bootstrap path: no baseline exists, candidate carries an error
+    # entry from a crashed benchmark — must not become the baseline
+    c_dir = tmp_path / "candidate"
+    c_dir.mkdir()
+    broken = make_artifact(
+        ok=entry(wall_s=1.0),
+        **{"fleet.error": {"wall_s": None, "wire_bytes": None,
+                           "eval_score": None,
+                           "extra": {"error": "ValueError: boom"}}})
+    for group in registry.GROUPS:
+        registry.artifact_path(c_dir, group).write_text(
+            json.dumps(dict(broken, group=group)))
+    b_dir = tmp_path / "baseline"
+    assert cr.main(["--baseline", str(b_dir), "--candidate", str(c_dir),
+                    "--update"]) == 1
+    assert not b_dir.exists()
+
+
+def test_unknown_baseline_cpu_never_arms_wall_gate():
+    base = make_artifact(cpu="unknown",
+                         dense=entry(wall_s=1.0, wire_bytes=64))
+    cand = copy.deepcopy(base)
+    cand["entries"]["dense"]["wall_s"] = 10.0     # way past ±30%
+    findings = cr.compare_artifacts(base, cand)
+    assert fatals(findings) == []                 # advisory, even cpu==cpu
+    assert any(f.metric == "env.cpu" for f in findings)   # noted
+
+
+def test_cli_update_copies_baselines(tmp_path):
+    b_dir, c_dir = _write_dirs(tmp_path, BASE, copy.deepcopy(BASE))
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["dense"]["wire_bytes"] = 1
+    registry.artifact_path(c_dir, "fleet").write_text(json.dumps(
+        dict(cand, group="fleet")))
+    assert cr.main(["--baseline", str(b_dir), "--candidate", str(c_dir),
+                    "--update"]) == 0
+    refreshed = json.loads(
+        registry.artifact_path(b_dir, "fleet").read_text())
+    assert refreshed["entries"]["dense"]["wire_bytes"] == 1
+    assert cr.main(["--baseline", str(b_dir),
+                    "--candidate", str(c_dir)]) == 0
+
+
+def test_empty_entries_roundtrip(tmp_path):
+    empty = make_artifact()
+    b_dir, c_dir = _write_dirs(tmp_path, empty, copy.deepcopy(empty))
+    assert cr.main(["--baseline", str(b_dir),
+                    "--candidate", str(c_dir)]) == 0

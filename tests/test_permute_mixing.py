@@ -11,7 +11,6 @@ import pytest
 from repro.core import topology
 from repro.distributed.permute_mixing import (circulant_mixing_ref,
                                               signed_offsets)
-from repro.kernels import ref as kref
 
 
 def test_signed_offsets():
@@ -69,6 +68,20 @@ for representation in ("dense", "sparse", "circulant"):
         out_r = jax.jit(mix_r)(weights, thetas)
     np.testing.assert_allclose(np.asarray(out_r), np.asarray(dense_expect),
                                rtol=1e-5, atol=1e-5, err_msg=representation)
+
+# weighted graph: the sparse backend must apply each edge weight exactly
+# ONCE (neighbor_mask carries a_ji — using it as the gather weight on top
+# of the adj-weighted mixing matrix squared the weights)
+wadj = np.asarray(topology.erdos_renyi(n, p=0.5, seed=2), np.float32)
+wadj = wadj * rng.uniform(0.5, 2.0, size=(n, n)).astype(np.float32)
+wweights = jnp.asarray(wadj * rng.normal(size=n)[None, :], jnp.float32)
+topo_w = topology_repr.from_dense(wadj, "sparse")
+mix_w = make_topology_mixing(mesh, "data", topo_w)
+with mesh:
+    out_w = jax.jit(mix_w)(wweights, thetas)
+np.testing.assert_allclose(
+    np.asarray(out_w), np.asarray(jnp.einsum("ji,id->jd", wweights, thetas)),
+    rtol=1e-5, atol=1e-5, err_msg="weighted-sparse")
 print("PERMUTE_MIXING_OK")
 """
 

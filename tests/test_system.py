@@ -9,7 +9,7 @@ from repro.checkpoint import (load_pytree, restore_train_state, save_pytree,
                               save_train_state)
 from repro.configs import get_config
 from repro.core.netes import NetESConfig
-from repro.train.loop import TrainConfig, train_lm_netes, train_rl_netes
+from repro.train.loop import TrainConfig, train_rl_netes
 
 
 def test_rl_training_improves(tmp_path):
