@@ -10,6 +10,7 @@ further for smoke runs.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import pathlib
 from typing import Dict, Iterable, List
@@ -79,3 +80,23 @@ def save_result(name: str, payload: Dict) -> None:
 def emit(name: str, wall_s: float, derived: str) -> None:
     """CSV contract for benchmarks.run: name,us_per_call,derived."""
     print(f"{name},{wall_s * 1e6:.0f},{derived}")
+
+
+@contextlib.contextmanager
+def count_backend_compiles():
+    """Yields a list that grows by one per XLA backend compilation —
+    the fleet bench's steady-state gate (a warmed run must replay with
+    ZERO compiles; scheduled topologies must match static runs)."""
+    from jax._src import monitoring
+
+    counts: List[str] = []
+
+    def cb(event, *a, **kw):
+        if event == "/jax/core/compile/backend_compile_duration":
+            counts.append(event)
+
+    monitoring.register_event_duration_secs_listener(cb)
+    try:
+        yield counts
+    finally:
+        monitoring._unregister_event_duration_listener_by_callback(cb)

@@ -19,6 +19,16 @@ on (DESIGN.md §3/§8). Dense and sparse run the SAME graph and seeds, so
 their eval traces must agree — an end-to-end representation parity check
 at N = 1024.
 
+Scheduled-topology entries (DESIGN.md §9) run the same 1024-agent loop
+with the graph EVOLVING on device inside the fused scan —
+``resample_er(period=8)`` over the sparse payload, ``rotate_circulant``
+over traced ppermute/roll offsets (zero extra wire bytes), and a density
+anneal over the dense mask. Every timed run (static AND scheduled) is
+replayed after a same-shape warm-up under a compile counter and must
+trigger ZERO XLA compilations: that is the "one scan, no per-resample
+retrace" acceptance gate — a schedule that re-traced per graph would
+show extra compiles here.
+
 Two satellite legs make this the one path that exercises every layer the
 topology travels through:
 
@@ -41,7 +51,8 @@ import numpy as np
 from repro.core import topology, topology_repr
 from repro.core.netes import NetESConfig
 from repro.core.topology import TopologySpec
-from repro.train.loop import TrainConfig, build_topology, train_rl_netes
+from repro.train.loop import (TrainConfig, build_schedule, build_topology,
+                              train_rl_netes)
 
 from . import common, perfmodel, registry
 
@@ -60,12 +71,32 @@ REPRESENTATIONS = [
 def _fan_in(topo: topology_repr.Topology) -> int:
     """Per-agent distributed fetch count of the representation's wire
     format: K_max neighbor fetches (sparse), |±Δ| ppermute hops
-    (circulant), full all-gather (dense)."""
+    (circulant, static or traced), full all-gather (dense)."""
     if topo.kind == "sparse":
         return topo.k_max
     if topo.kind == "circulant":
+        if topo.shifts is not None:
+            return int(topo.shifts.shape[0])
         return len(topology_repr.signed_offsets(topo.offsets, topo.n))
     return topo.n
+
+
+def _run_fleet_tc(tc: TrainConfig, chunk: int):
+    """Warm-up + compile-counted timed run. Returns (hist, compiles).
+
+    The warm-up at iters=chunk compiles the SAME lax.scan (one chunk,
+    one eval) the timed run replays, so the gated step time is
+    steady-state — first-jit of the 1024-agent scan is tens of seconds
+    and would otherwise dominate (and flap ±30%) at ci scale. The timed
+    replay must then compile NOTHING: any recompile (e.g. a schedule
+    that re-traced per resample) shows up in the returned count and
+    fails the one-scan assertion in ``fleet_netes``.
+    """
+    train_rl_netes("landscape:rastrigin",
+                   dataclasses.replace(tc, iters=chunk))
+    with common.count_backend_compiles() as counts:
+        hist = train_rl_netes("landscape:rastrigin", tc)
+    return hist, len(counts)
 
 
 def fleet_netes(quick: bool = False):
@@ -74,6 +105,7 @@ def fleet_netes(quick: bool = False):
     chunk = max(1, iters // 2)
     entries = []
     finals = {}
+    compile_counts = {}
     for family, rep in REPRESENTATIONS:
         tc = TrainConfig(
             n_agents=N_FLEET, iters=iters,
@@ -84,18 +116,12 @@ def fleet_netes(quick: bool = False):
             netes=NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8))
         topo = build_topology(tc)
         assert topo.kind == rep, (topo.kind, rep)
-        # Warm-up at iters=chunk compiles the SAME lax.scan (one chunk,
-        # one eval) the timed run replays, so the gated step time is
-        # steady-state — first-jit of the 1024-agent scan is tens of
-        # seconds and would otherwise dominate (and flap ±30%) at ci
-        # scale.
-        train_rl_netes("landscape:rastrigin",
-                       dataclasses.replace(tc, iters=chunk))
-        hist = train_rl_netes("landscape:rastrigin", tc)
+        hist, compiles = _run_fleet_tc(tc, chunk)
         step_s = hist["wall_s"] / iters
         fan_in = _fan_in(topo)
         wire = perfmodel.wire_bytes(N_FLEET, fan_in, rep)
         finals[rep] = hist["final_eval"]
+        compile_counts[rep] = compiles
         common.emit(
             f"fleet.netes{N_FLEET}.{rep}", step_s,
             f"fan_in={fan_in} wire_mb={wire / 2 ** 20:.0f} "
@@ -109,12 +135,84 @@ def fleet_netes(quick: bool = False):
                    "family": family, "fan_in": fan_in,
                    "total_wall_s": hist["wall_s"],
                    "max_eval": hist["max_eval"],
+                   "timed_compiles": compiles,
                    "model_step_us": perfmodel.modeled_step_us(
                        N_FLEET, fan_in, rep)}))
     # representation parity at N=1024: same graph + seeds ⇒ same training
     # trajectory for the dense and sparse backends.
     assert abs(finals["dense"] - finals["sparse"]) <= \
         1e-3 * max(1.0, abs(finals["dense"])), finals
+    # EVERY static representation must replay compile-free — not just
+    # dense (a retrace in the sparse/circulant dispatch would otherwise
+    # only show up in entry extras, never fail CI).
+    assert all(c == 0 for c in compile_counts.values()), (
+        f"static timed runs recompiled: {compile_counts}")
+    entries += fleet_scheduled(quick=quick,
+                               static_compiles=compile_counts["dense"])
+    return entries
+
+
+# (name_suffix, family, representation, schedule_str); the schedule
+# string's horizon placeholder is filled per profile.
+SCHEDULES = [
+    ("sched_resample_er", "erdos_renyi", "sparse",
+     "resample_er(period=8)"),
+    ("sched_rotate_circulant", "circulant_erdos_renyi", "circulant",
+     "rotate_circulant(stride=1)"),
+    ("sched_anneal_density", "erdos_renyi", "dense",
+     "anneal_density(p_end=0.02,horizon={iters})"),
+]
+
+
+def fleet_scheduled(quick: bool = False, static_compiles: int = 0):
+    """Scheduled-topology runs at N=1024 (DESIGN.md §9): same fused-scan
+    loop, graph evolving on device. Asserts the acceptance contract —
+    each scheduled timed run shows the SAME compile count as the static
+    run (both zero after warm-up: one scan, no per-resample retrace)."""
+    # 16 quick iters (vs 6 static) so period=8 actually fires a redraw
+    # inside the ci run; 24 full = three redraws.
+    iters = 16 if quick else 24
+    chunk = iters // 2
+    entries = []
+    for suffix, family, rep, sched_tpl in SCHEDULES:
+        sched_str = sched_tpl.format(iters=iters)
+        tc = TrainConfig(
+            n_agents=N_FLEET, iters=iters,
+            topology=TopologySpec(family=family, n_agents=N_FLEET,
+                                  p=P_FLEET, seed=0),
+            representation=rep, schedule=sched_str, seed=0,
+            eval_every=chunk, eval_episodes=4,
+            netes=NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8))
+        schedule = build_schedule(tc)
+        topo0 = schedule.init().topo
+        assert topo0.kind == rep, (topo0.kind, rep)
+        hist, compiles = _run_fleet_tc(tc, chunk)
+        assert compiles == static_compiles == 0, (
+            f"{suffix}: scheduled timed run compiled {compiles}× vs "
+            f"static {static_compiles}× — the schedule left the fused "
+            "scan (per-resample retrace?)")
+        step_s = hist["wall_s"] / iters
+        fan_in = _fan_in(topo0)
+        wire = perfmodel.wire_bytes(N_FLEET, fan_in, rep)
+        common.emit(
+            f"fleet.netes{N_FLEET}.{suffix}", step_s,
+            f"fan_in={fan_in} wire_mb={wire / 2 ** 20:.0f} "
+            f"final={hist['final_eval']:.2f} compiles={compiles}")
+        entries.append(registry.Entry(
+            name=f"fleet.netes{N_FLEET}.{suffix}",
+            wall_s=step_s,
+            wire_bytes=wire,
+            eval_score=hist["final_eval"],
+            extra={"n": N_FLEET, "p": P_FLEET, "iters": iters,
+                   "family": family, "fan_in": fan_in,
+                   "schedule": sched_str,
+                   "representation": rep,
+                   "k_max": schedule.k_max,
+                   "total_wall_s": hist["wall_s"],
+                   "max_eval": hist["max_eval"],
+                   "timed_compiles": compiles,
+                   "model_step_us": perfmodel.modeled_step_us(
+                       N_FLEET, fan_in, rep)}))
     return entries
 
 
@@ -162,13 +260,50 @@ def replica_step(quick: bool = False):
     wire = perfmodel.wire_bytes(n, fan_in, topo.kind)
     common.emit(f"fleet.replica_step.{topo.kind}", step_s,
                 f"n={n} loss={loss:.3f}")
-    return [registry.Entry(
+    entries = [registry.Entry(
         name="fleet.replica_step",
         wall_s=step_s,
         wire_bytes=wire,
         eval_score=-loss,
         extra={"n": n, "representation": topo.kind, "fan_in": fan_in,
                "arch": "fleet-nano"})]
+
+    # scheduled variant: PairSpec.sched → build_step compiles the
+    # schedule, the step takes/returns the ScheduleState — the full
+    # launch-layer path for time-varying topologies (DESIGN.md §9).
+    from repro.core.topology_sched import ScheduleSpec
+    pair_s = dataclasses.replace(
+        pair, sched=ScheduleSpec(kind="resample_er", period=2, seed=0))
+    step_fn, order = specs.build_step(pair_s, make_host_mesh())
+    assert order[-1] == "sched", order
+    schedule = specs._compile_pair_schedule(pair_s)
+    sstate = schedule.init()
+    step_fn = jax.jit(step_fn)
+    params = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), p0)
+    params, m, sstate = step_fn(params, None, batch,
+                                jax.random.fold_in(key, 100), sstate)
+    jax.block_until_ready(m["loss_mean"])          # compile + first step
+    t0 = time.time()
+    for it in range(1, n_steps):
+        params, m, sstate = step_fn(params, None, batch,
+                                    jax.random.fold_in(key, 100 + it),
+                                    sstate)
+    loss_s = float(jax.block_until_ready(m["loss_mean"]))
+    sched_step_s = (time.time() - t0) / max(1, n_steps - 1)
+    assert int(sstate.t) == n_steps
+    rep_s = schedule.representation
+    fan_s = schedule.k_max if rep_s == "sparse" else n
+    common.emit(f"fleet.replica_step_sched.{rep_s}", sched_step_s,
+                f"n={n} loss={loss_s:.3f}")
+    entries.append(registry.Entry(
+        name="fleet.replica_step_sched",
+        wall_s=sched_step_s,
+        wire_bytes=perfmodel.wire_bytes(n, fan_s, rep_s),
+        eval_score=-loss_s,
+        extra={"n": n, "representation": rep_s,
+               "schedule": "resample_er(period=2)", "arch": "fleet-nano"}))
+    return entries
 
 
 def sparse_kernel(quick: bool = False):

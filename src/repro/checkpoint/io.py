@@ -5,6 +5,7 @@ deterministic — keys are the joined tree paths.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 from typing import Any, Dict, Optional, Tuple
 
@@ -13,6 +14,13 @@ import numpy as np
 from jax.tree_util import tree_flatten_with_path, tree_unflatten
 
 _SEP = "::"
+
+
+def _escape(part: str) -> str:
+    """Escape ':' (and the escape char itself) so no single path part can
+    contain the ``::`` separator — dict keys like ``"a::b"`` would
+    otherwise collide with the nested path ``{"a": {"b": ...}}``."""
+    return part.replace("\\", "\\\\").replace(":", "\\:")
 
 
 def _path_key(path) -> str:
@@ -24,7 +32,7 @@ def _path_key(path) -> str:
             parts.append(str(p.idx))
         else:
             parts.append(str(p))
-    return _SEP.join(parts)
+    return _SEP.join(_escape(part) for part in parts)
 
 
 def save_pytree(path: str | pathlib.Path, tree: Any) -> None:
@@ -36,7 +44,9 @@ def save_pytree(path: str | pathlib.Path, tree: Any) -> None:
 
 
 def load_pytree(path: str | pathlib.Path, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like`` (shape AND dtype validated —
+    a silent cast would round-trip f32 state through f16 corruption, or
+    turn a threefry uint32 key into garbage)."""
     data = np.load(path, allow_pickle=False)
     flat, treedef = tree_flatten_with_path(like)
     leaves = []
@@ -48,7 +58,17 @@ def load_pytree(path: str | pathlib.Path, like: Any) -> Any:
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {ref.shape}")
-        leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+        if arr.dtype != np.dtype(ref.dtype):
+            raise ValueError(f"dtype mismatch for {key}: "
+                             f"{arr.dtype} vs {np.dtype(ref.dtype)}")
+        out = jax.numpy.asarray(arr)
+        if out.dtype != arr.dtype:
+            # jnp.asarray canonicalizes (e.g. f64 → f32 with x64 off) —
+            # that would silently undo the strict check above.
+            raise ValueError(
+                f"dtype {arr.dtype} for {key} is not representable under "
+                f"the current jax config (canonicalizes to {out.dtype})")
+        leaves.append(out)
     return tree_unflatten(treedef, [leaf for leaf in leaves])
 
 
@@ -60,7 +80,12 @@ def save_train_state(directory: str | pathlib.Path, step: int, params: Any,
     save_pytree(ckpt, params)
     meta = {"step": step, **(extra or {})}
     (directory / f"step_{step:08d}.json").write_text(json.dumps(meta))
-    (directory / "latest.json").write_text(json.dumps(meta))
+    # latest.json is the resume pointer: write-then-rename so a crash
+    # mid-write leaves the previous pointer intact (rename is atomic on
+    # POSIX; the payload npz above is already fully on disk by now).
+    tmp = directory / "latest.json.tmp"
+    tmp.write_text(json.dumps(meta))
+    os.replace(tmp, directory / "latest.json")
     return ckpt
 
 

@@ -73,7 +73,11 @@ def init_state(key: jax.Array, n_agents: int, dim: int,
         thetas=thetas,
         key=key,
         step=jnp.zeros((), jnp.int32),
-        best_reward=jnp.full((), -jnp.inf),
+        # explicit dtype: a weak-typed scalar here would come back
+        # strong-typed from the first fused scan, giving the second
+        # same-shape chunk a NEW jit signature (one spurious recompile
+        # mid-run — caught by the fleet bench's compile-count gate)
+        best_reward=jnp.full((), -jnp.inf, jnp.float32),
         best_theta=thetas[0],
     )
 
@@ -182,9 +186,15 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
     return new_state, metrics
 
 
+@partial(jax.jit, static_argnames=("reward_fn", "cfg", "num_iters"))
 def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
         cfg: NetESConfig, num_iters: int) -> Tuple[NetESState, dict]:
-    """lax.scan driver over ``netes_step`` (fully on-device training loop)."""
+    """lax.scan driver over ``netes_step`` (fully on-device training loop).
+
+    Jitted at this level so repeat calls with the same shapes hit the
+    executable cache: an EAGER ``lax.scan`` re-traces its body every call
+    and its fresh jaxpr misses the primitive-dispatch cache, recompiling
+    the scan shell once per eval chunk."""
 
     def body(s, _):
         s, m = netes_step(s, adj, reward_fn, cfg)
@@ -192,6 +202,39 @@ def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
 
     state, metrics = jax.lax.scan(body, state, None, length=num_iters)
     return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# scheduled (time-varying) topologies — DESIGN.md §9
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("reward_fn", "cfg", "schedule"))
+def scheduled_step(state: NetESState, sched_state, reward_fn: Callable,
+                   cfg: NetESConfig, schedule):
+    """One NetES iteration under a ``topology_sched.TopologySchedule``:
+    step on the topology in force, then advance the schedule on device.
+    Returns ``(state', sched_state', metrics)``."""
+    state, metrics = netes_step(state, sched_state.topo, reward_fn, cfg)
+    return state, schedule.advance(sched_state), metrics
+
+
+@partial(jax.jit,
+         static_argnames=("reward_fn", "cfg", "schedule", "num_iters"))
+def run_scheduled(state: NetESState, sched_state, reward_fn: Callable,
+                  cfg: NetESConfig, schedule, num_iters: int):
+    """``run`` with the topology state joined into the scan carry: the
+    graph anneals/resamples/rotates ON DEVICE inside one compiled scan
+    (no per-resample re-trace, no host round-trips). Returns
+    ``(state, sched_state, metrics)``."""
+
+    def body(carry, _):
+        s, ss = carry
+        s, m = netes_step(s, ss.topo, reward_fn, cfg)
+        return (s, schedule.advance(ss)), m
+
+    (state, sched_state), metrics = jax.lax.scan(
+        body, (state, sched_state), None, length=num_iters)
+    return state, sched_state, metrics
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,12 @@ topology a first-class, dispatchable choice (DESIGN.md §3):
     (``topology.circulant_offsets``): the mixing update is a chain of
     rolls (single host) or ``lax.ppermute``s (distributed,
     ``distributed/permute_mixing.py``), moving exactly p·N·D bytes.
+    Offsets are normally STATIC (a tuple in the pytree aux); a
+    *scheduled* circulant (``core/topology_sched.rotate_circulant``)
+    instead carries its signed offsets as a TRACED int32 ``shifts``
+    array so the graph can rotate inside one ``lax.scan`` trace — the
+    roll chain takes the shift values at runtime while the chain
+    LENGTH stays static (DESIGN.md §9).
 
 ``Topology`` is a registered JAX pytree: array leaves (adjacency /
 neighbor lists / degrees) trace through ``jit`` and ``lax.scan`` while the
@@ -73,8 +79,12 @@ class Topology:
                   ``a_ji`` (1.0 on the generators' binary graphs), 0 on
                   padding; padded slots index row ``j`` itself so gathers
                   stay in bounds
-    * circulant:  ``offsets`` — generator offsets d ∈ [1, n//2]; the edge
-                  set is ∪_d {(i, i±d mod n)} plus self-loops.
+    * circulant:  ``offsets`` — STATIC generator offsets d ∈ [1, n//2]
+                  (edge set ∪_d {(i, i±d mod n)} plus self-loops) — OR
+                  ``shifts``, a TRACED ``(2K,)`` int32 array of distinct
+                  signed ring shifts, used by scheduled (rotating)
+                  circulants whose offsets change inside a scan trace.
+                  Exactly one of the two is set.
 
     ``deg (N,)`` float32 (row degrees, self-loop included) is always
     present — the ``normalization="degree"`` variant of Eq. 3 needs it
@@ -87,21 +97,23 @@ class Topology:
     adj: Optional[Array] = None                 # (N, N)      [dense]
     neighbor_idx: Optional[Array] = None        # (N, K_max)  [sparse]
     neighbor_mask: Optional[Array] = None       # (N, K_max)  [sparse]
-    offsets: Optional[Tuple[int, ...]] = None   # [circulant]
+    offsets: Optional[Tuple[int, ...]] = None   # [circulant, static]
+    shifts: Optional[Array] = None              # (2K,) int32 [circulant,
+    #                                             traced/scheduled]
 
     # -- pytree protocol (kind/n/offsets static, arrays traced) ----------
     def tree_flatten(self):
         children = (self.deg, self.adj, self.neighbor_idx,
-                    self.neighbor_mask)
+                    self.neighbor_mask, self.shifts)
         aux = (self.kind, self.n, self.offsets)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        deg, adj, idx, mask = children
+        deg, adj, idx, mask, shifts = children
         kind, n, offsets = aux
         return cls(kind=kind, n=n, deg=deg, adj=adj, neighbor_idx=idx,
-                   neighbor_mask=mask, offsets=offsets)
+                   neighbor_mask=mask, offsets=offsets, shifts=shifts)
 
     @property
     def k_max(self) -> int:
@@ -112,6 +124,15 @@ class Topology:
         if self.kind == "dense":
             return self.adj
         if self.kind == "circulant":
+            if self.shifts is not None:
+                # traced-shift (scheduled) circulant: rows of a rolled
+                # identity. Shifts are distinct and nonzero by the
+                # schedule contract, so 0/1 entries need no clipping.
+                eye = jnp.eye(self.n, dtype=jnp.float32)
+                acc = eye
+                for k in range(self.shifts.shape[0]):
+                    acc = acc + jnp.roll(eye, self.shifts[k], axis=1)
+                return acc
             return jnp.asarray(
                 topo_gen.circulant_from_offsets(self.n, list(self.offsets)))
         # sparse: scatter the edge weights through the neighbor list.
@@ -132,7 +153,9 @@ jax.tree_util.register_pytree_node(
 # host-side builders
 # ---------------------------------------------------------------------------
 
-def sparse_neighbors(adj: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def sparse_neighbors(adj: np.ndarray,
+                     k_max: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Padded neighbor-list from a dense adjacency (host-side numpy).
 
     Returns ``(neighbor_idx (N, K_max) int32, neighbor_mask (N, K_max)
@@ -140,11 +163,18 @@ def sparse_neighbors(adj: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     ``adj[j, i]`` (1.0 for the binary graphs the generators emit), so
     weighted adjacencies survive the representation; padded slots index
     the row itself (in-bounds gathers) with weight 0.
+
+    ``k_max`` overrides the pad width (≥ the graph's max degree):
+    topology SCHEDULES re-pad to a static K_max with headroom so that
+    on-device resamples keep the scan carry's shapes fixed.
     """
     adj = np.asarray(adj)
     n = adj.shape[0]
     degs = (adj != 0).sum(axis=1)
-    k_max = max(int(degs.max()), 1)
+    if k_max is None:
+        k_max = max(int(degs.max()), 1)
+    elif k_max < int(degs.max()):
+        raise ValueError(f"k_max={k_max} < max degree {int(degs.max())}")
     idx = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, k_max))
     mask = np.zeros((n, k_max), np.float32)
     for j in range(n):
@@ -251,6 +281,15 @@ def signed_offsets(offsets: Sequence[int], n: int):
     return sorted(set(out) - {0})
 
 
+def _circulant_shifts(topo: Topology):
+    """Iterable of ring shifts for the roll-chain backend: static Python
+    ints (``offsets``) or traced int32 scalars (``shifts`` — scheduled
+    rotating circulants). Chain length is static either way."""
+    if topo.shifts is not None:
+        return [topo.shifts[k] for k in range(topo.shifts.shape[0])]
+    return signed_offsets(topo.offsets, topo.n)
+
+
 # ---------------------------------------------------------------------------
 # representation-dispatched primitives (jittable)
 # ---------------------------------------------------------------------------
@@ -277,7 +316,7 @@ def weighted_neighbor_sum(topo: Topology, coeff: Array,
         c = coeff.astype(values.dtype)
         src = c.reshape((-1,) + (1,) * (values.ndim - 1)) * values
         acc = src  # d = 0 (self-loop)
-        for d in signed_offsets(topo.offsets, topo.n):
+        for d in _circulant_shifts(topo):
             acc = acc + jnp.roll(src, -d, axis=0)
         return acc
     # sparse: loop over neighbor slots; each step is one row-gather + fma,
@@ -305,13 +344,83 @@ def weighted_neighbor_sum(topo: Topology, coeff: Array,
     return acc
 
 
+# ---------------------------------------------------------------------------
+# in-place representation refresh (jittable — the topology-schedule paths)
+# ---------------------------------------------------------------------------
+#
+# A scheduled topology (core/topology_sched.py) lives in a lax.scan carry,
+# so its updates must keep every array shape and the pytree aux static:
+# dense refreshes swap the (N, N) mask, sparse refreshes re-pad to the
+# SAME K_max via top_k, rotating circulants swap the traced shift values.
+
+def refresh_dense(topo: Topology, adj: Array) -> Topology:
+    """New dense adjacency in place (degrees recomputed on device)."""
+    return dataclasses.replace(topo, adj=adj, deg=adj.sum(axis=1))
+
+
+def refresh_sparse(topo: Topology, adj: Array) -> Topology:
+    """Re-derive the neighbor list from a fresh (N, N) adjacency, padded
+    to the EXISTING static ``k_max`` (on device, via per-row top_k).
+
+    Rows whose degree exceeds ``k_max`` are truncated to k_max edges
+    (schedules size the pad with binomial-tail headroom so this is a
+    vanishing-probability event — DESIGN.md §9); ``deg`` counts the KEPT
+    edges so degree normalization stays consistent with what the gather
+    actually sums. Assumes non-negative edge weights (the generators emit
+    binary graphs) — top_k would misorder negative weights.
+    """
+    k_max = topo.k_max
+    vals, idx = jax.lax.top_k(adj, k_max)          # (N, K), (N, K)
+    return dataclasses.replace(
+        topo, neighbor_idx=idx.astype(jnp.int32),
+        neighbor_mask=vals.astype(jnp.float32),
+        deg=vals.sum(axis=1).astype(jnp.float32))
+
+
+def shift_circulant(topo: Topology, offsets: Array) -> Topology:
+    """Swap the traced offset set of a scheduled circulant.
+
+    ``offsets (K,)`` int32, values in [1, (n−1)//2] — the bound keeps
+    +d and −d distinct so the signed chain ±Δ has exactly 2K distinct
+    nonzero shifts and the degree (2K + 1) is invariant under rotation.
+    """
+    signed = jnp.concatenate([offsets, topo.n - offsets]).astype(jnp.int32)
+    return dataclasses.replace(topo, shifts=signed)
+
+
+def neighbor_column(topo: Topology, i: Array) -> Array:
+    """Dense column i of the adjacency — ``a_:,i`` as an (N,) vector.
+
+    Used by the distributed seed-replay ε-scan, which consumes one
+    per-SOURCE weight column per scan step: this derives the column from
+    the live representation in O(N + K) instead of materializing the
+    O(N²) dense adjacency up front. Relies on symmetry (column i ≡ row
+    i), which every generator guarantees (core/topology.py conventions).
+    """
+    if topo.kind == "dense":
+        return topo.adj[:, i]
+    if topo.kind == "circulant":
+        col = jnp.zeros((topo.n,), jnp.float32).at[i].set(1.0)
+        if topo.shifts is not None:
+            shifts = topo.shifts
+        else:
+            shifts = jnp.asarray(signed_offsets(topo.offsets, topo.n),
+                                 jnp.int32)
+        if shifts.shape[0]:
+            col = col.at[(i + shifts) % topo.n].add(1.0)
+        return col
+    # sparse: scatter row i's neighbor list (padded slots add weight 0)
+    return jnp.zeros((topo.n,), jnp.float32).at[topo.neighbor_idx[i]].add(
+        topo.neighbor_mask[i])
+
+
 def weighted_row_sum(topo: Topology, coeff: Array) -> Array:
     """``Σ_i a_ji · coeff_i`` per row j — the self-correction weight."""
     if topo.kind == "dense":
         return (topo.adj * coeff[None, :]).sum(axis=1)
     if topo.kind == "circulant":
         acc = coeff
-        for d in signed_offsets(topo.offsets, topo.n):
+        for d in _circulant_shifts(topo):
             acc = acc + jnp.roll(coeff, -d)
         return acc
     return (topo.neighbor_mask

@@ -1,0 +1,321 @@
+"""Scheduled (time-varying) communication topologies (DESIGN.md §9).
+
+The paper runs every experiment on a FIXED graph, but its discussion —
+and the sparser-topologies precursor (Adjodah et al. 2017) — argues the
+real win is *optimizing* the topology; Graph-GRPO (arXiv:2603.02701)
+makes the same case for topology that changes during training. This
+module makes a time-varying topology a first-class, serializable,
+scan-compatible object:
+
+``ScheduleSpec``
+    The serializable schedule description (mirrors ``TopologySpec``):
+
+    * ``static`` — the PR-1/2 behavior; the graph never changes.
+    * ``anneal_density`` — edge density moves from the base spec's ``p``
+      to ``p_end`` over ``horizon`` iterations. A single fixed uniform
+      draw is re-thresholded at p(t) each step, so successive graphs are
+      NESTED (annealing removes/adds edges monotonically) and the graph
+      at step t is a pure function of (seed, t).
+    * ``resample_er(period)`` — a fresh Erdos-Renyi graph at the base
+      density every ``period`` iterations, drawn on device from a
+      threefry key carried in the scan state.
+    * ``rotate_circulant(stride)`` — the circulant offset set rotates by
+      ``stride`` (mod (n−1)//2) every iteration: each agent's neighbor
+      ring sweeps the population while degree, wire bytes, and ppermute
+      hop count stay exactly constant.
+
+``TopologySchedule``
+    The compiled form: a hashable (jit-static) object whose ``init()``
+    builds the t = 0 ``ScheduleState`` host-side and whose ``advance()``
+    is pure jax — the topology update runs ON DEVICE inside the same
+    ``lax.scan`` as the training step (threefry key in the carry, no
+    host round-trips, no per-resample re-trace). All array shapes and
+    the ``Topology`` pytree aux are invariant across ``advance``, which
+    is what keeps the whole schedule inside ONE compiled scan:
+
+    * dense refreshes swap the (N, N) mask in place;
+    * sparse refreshes re-pad to a STATIC K_max (binomial-tail headroom
+      over every density the schedule can visit);
+    * rotating circulants carry their signed offsets as a traced int32
+      array (``Topology.shifts``) consumed by the roll chain.
+
+On-device resamples skip the host generators' connectivity repair (BFS
+is not a fixed-shape program); for the scheduled regimes p ≳ ln n / n an
+ER draw is connected w.h.p., and a rare disconnected interval only
+delays mixing (broadcast still couples the population) — recorded in
+DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import re
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import topology as topo_gen
+from . import topology_repr
+from .topology import TopologySpec
+from .topology_repr import Topology
+
+Array = jax.Array
+
+KINDS = ("static", "anneal_density", "resample_er", "rotate_circulant")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """Serializable schedule description (travels with ``TopologySpec``
+    through ``TrainConfig.schedule`` and ``launch/specs.PairSpec.sched``).
+    """
+
+    kind: str = "static"
+    period: int = 1              # resample_er: iterations between redraws
+    stride: int = 1              # rotate_circulant: offset shift per iter
+    p_end: Optional[float] = None  # anneal_density: final density
+    horizon: int = 0             # anneal_density: iters to reach p_end
+    seed: int = 0                # threefry stream for on-device draws
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown schedule kind {self.kind!r}; "
+                             f"available: {KINDS}")
+        if self.kind == "resample_er" and self.period < 1:
+            raise ValueError("resample_er needs period >= 1")
+        if self.kind == "anneal_density":
+            if self.p_end is None or self.horizon < 1:
+                raise ValueError("anneal_density needs p_end and "
+                                 "horizon >= 1")
+
+    @classmethod
+    def parse(cls, text: str) -> "ScheduleSpec":
+        """``"static" | "resample_er(period=8)" | "anneal_density(
+        p_end=0.05,horizon=100)" | "rotate_circulant(stride=3)"`` —
+        the CLI/serialized form."""
+        m = re.fullmatch(r"\s*(\w+)\s*(?:\(([^)]*)\))?\s*", text)
+        if not m:
+            raise ValueError(f"unparseable schedule {text!r}")
+        kind, argstr = m.group(1), m.group(2) or ""
+        kw = {}
+        for part in filter(None, (p.strip() for p in argstr.split(","))):
+            k, _, v = part.partition("=")
+            if not _:
+                raise ValueError(f"schedule arg {part!r} is not key=value")
+            k = k.strip()
+            kw[k] = float(v) if k == "p_end" else int(v)
+        return cls(kind=kind, **kw)
+
+
+class ScheduleState(NamedTuple):
+    """The scan-carry: the topology in force for iteration ``t``, plus
+    the threefry key that future on-device redraws will consume. A plain
+    pytree — it checkpoints through ``checkpoint.save_pytree`` and joins
+    the ``lax.scan`` carry next to the NetES state."""
+
+    topo: Topology
+    key: Array         # threefry carry (resample_er consumes it)
+    t: Array           # int32 — iteration the topology corresponds to
+
+
+# ---------------------------------------------------------------------------
+# on-device graph construction
+# ---------------------------------------------------------------------------
+
+def er_adjacency(key: Array, n: int, p) -> Array:
+    """Symmetric self-looped G(n, p) drawn on device (jittable; ``p`` may
+    be traced). No connectivity repair — see the module docstring."""
+    u = jax.random.uniform(key, (n, n))
+    upper = jnp.triu((u < p).astype(jnp.float32), k=1)
+    return jnp.maximum(upper + upper.T, jnp.eye(n, dtype=jnp.float32))
+
+
+def pad_k_max(n: int, p: float, observed: int) -> int:
+    """Static neighbor-list pad for a schedule that redraws at density
+    ``p``: the observed base max-degree or a 4σ binomial tail over the
+    n−1 potential neighbors (+ self-loop), whichever is larger."""
+    tail = 1 + (n - 1) * p + 4.0 * math.sqrt(max((n - 1) * p * (1 - p),
+                                                 0.0))
+    return min(n, max(observed, int(math.ceil(tail)) + 1))
+
+
+# ---------------------------------------------------------------------------
+# the compiled schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """Compiled (spec × base graph) — hashable, so it rides through
+    ``jax.jit`` as a static argument while every array lives in the
+    ``ScheduleState`` it initializes and advances."""
+
+    spec: ScheduleSpec
+    base: TopologySpec
+    representation: str                 # resolved: dense|sparse|circulant
+    n: int
+    k_max: int = 0                      # sparse static pad
+    base_offsets: Tuple[int, ...] = ()  # rotate_circulant
+
+    @property
+    def static(self) -> bool:
+        return self.spec.kind == "static"
+
+    # -- host-side --------------------------------------------------------
+    def init(self) -> ScheduleState:
+        """Build the t = 0 state. The base graph comes from the paper's
+        host generators (connectivity-repaired) except for
+        ``anneal_density``, whose t = 0 graph must already lie on the
+        schedule's own threshold path so that the scan and a resumed run
+        see one consistent trajectory."""
+        key = jax.random.PRNGKey(self.spec.seed)
+        t0 = jnp.zeros((), jnp.int32)
+        if self.spec.kind == "rotate_circulant":
+            adj = self.base.build()
+            deg = jnp.asarray(np.asarray(adj).sum(axis=1))
+            topo = Topology(kind="circulant", n=self.n, deg=deg)
+            topo = topology_repr.shift_circulant(
+                topo, jnp.asarray(self.base_offsets, jnp.int32))
+            return ScheduleState(topo=topo, key=key, t=t0)
+        if self.spec.kind == "anneal_density":
+            template = self._template()
+            topo = self._refresh(template, er_adjacency(
+                jax.random.PRNGKey(self.spec.seed), self.n, self.base.p))
+            return ScheduleState(topo=topo, key=key, t=t0)
+        # static / resample_er: the host-built (repaired) base graph
+        adj = np.asarray(self.base.build(), np.float32)
+        if self.representation == "sparse":
+            idx, mask = topology_repr.sparse_neighbors(
+                adj, k_max=self.k_max or None)
+            topo = Topology(kind="sparse", n=self.n,
+                            deg=jnp.asarray(adj.sum(axis=1)),
+                            neighbor_idx=jnp.asarray(idx),
+                            neighbor_mask=jnp.asarray(mask))
+        else:
+            topo = topology_repr.from_dense(adj, self.representation)
+        return ScheduleState(topo=topo, key=key, t=t0)
+
+    def _template(self) -> Topology:
+        """Fixed-shape Topology shell for the refresh paths."""
+        n = self.n
+        if self.representation == "sparse":
+            return Topology(
+                kind="sparse", n=n, deg=jnp.zeros((n,), jnp.float32),
+                neighbor_idx=jnp.zeros((n, self.k_max), jnp.int32),
+                neighbor_mask=jnp.zeros((n, self.k_max), jnp.float32))
+        return Topology(kind="dense", n=n,
+                        deg=jnp.zeros((n,), jnp.float32),
+                        adj=jnp.zeros((n, n), jnp.float32))
+
+    def _refresh(self, topo: Topology, adj: Array) -> Topology:
+        if self.representation == "sparse":
+            return topology_repr.refresh_sparse(topo, adj)
+        return topology_repr.refresh_dense(topo, adj)
+
+    # -- traced -----------------------------------------------------------
+    def advance(self, state: ScheduleState) -> ScheduleState:
+        """Pure-jax transition to iteration t + 1's topology. Shapes and
+        pytree structure are invariant, so this composes with lax.scan
+        (ONE trace for the whole schedule). Routed through a jit cache so
+        the traced jaxpr (and its embedded constants) is ONE object per
+        (schedule, aval) signature — an outer eager ``lax.scan`` whose
+        body re-traced fresh constants every call would miss the
+        executable cache and recompile per call."""
+        return _advance_jit(self, state)
+
+    def _advance_impl(self, state: ScheduleState) -> ScheduleState:
+        t1 = state.t + 1
+        if self.spec.kind == "static":
+            return ScheduleState(topo=state.topo, key=state.key, t=t1)
+        if self.spec.kind == "rotate_circulant":
+            m = max(1, (self.n - 1) // 2)
+            base = jnp.asarray(self.base_offsets, jnp.int32)
+            offs = (base - 1 + self.spec.stride * t1) % m + 1
+            return ScheduleState(
+                topo=topology_repr.shift_circulant(state.topo, offs),
+                key=state.key, t=t1)
+        if self.spec.kind == "anneal_density":
+            frac = jnp.minimum(t1.astype(jnp.float32) / self.spec.horizon,
+                               1.0)
+            p_t = self.base.p + (self.spec.p_end - self.base.p) * frac
+            adj = er_adjacency(jax.random.PRNGKey(self.spec.seed), self.n,
+                               p_t)
+            return ScheduleState(topo=self._refresh(state.topo, adj),
+                                 key=state.key, t=t1)
+        # resample_er: split every step (topology at t is a function of
+        # (seed, t) alone — resumable mid-schedule), redraw on period.
+        # The redraw runs INSIDE the cond branch so off-period steps skip
+        # the O(N²) sample + re-pad entirely.
+        key, sub = jax.random.split(state.key)
+
+        def redraw(op):
+            k, topo = op
+            return self._refresh(topo, er_adjacency(k, self.n,
+                                                    self.base.p))
+
+        topo = jax.lax.cond(t1 % self.spec.period == 0,
+                            redraw, lambda op: op[1], (sub, state.topo))
+        return ScheduleState(topo=topo, key=key, t=t1)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _advance_jit(schedule: "TopologySchedule",
+                 state: ScheduleState) -> ScheduleState:
+    return schedule._advance_impl(state)
+
+
+def compile_schedule(spec: Optional[ScheduleSpec], base: TopologySpec,
+                     representation: str = "auto") -> TopologySchedule:
+    """Resolve (ScheduleSpec × TopologySpec × representation) into a
+    ``TopologySchedule``. ``spec=None`` compiles as static.
+
+    Representation resolution: ``rotate_circulant`` requires the base
+    graph to be exactly circulant with max offset ≤ (n−1)//2 (so ±d stay
+    distinct under rotation); ``anneal_density``/``resample_er`` refresh
+    dense or sparse payloads (``auto`` picks via ``select_representation``
+    on the base graph, mapping circulant → sparse — a redrawn ER graph
+    has no offset structure to preserve).
+    """
+    spec = spec or ScheduleSpec()
+    n = base.n_agents
+    adj = np.asarray(base.build(), np.float32)
+    if spec.kind == "rotate_circulant":
+        if representation not in ("auto", "circulant"):
+            raise ValueError("rotate_circulant schedules require the "
+                             f"circulant representation, not "
+                             f"{representation!r}")
+        offs = topo_gen.circulant_offsets(adj)
+        if offs is None or not np.array_equal(
+                adj, topo_gen.circulant_from_offsets(n, offs)):
+            raise ValueError("rotate_circulant needs an exactly circulant "
+                             f"base graph (family {base.family!r} is not)")
+        if offs and max(offs) > (n - 1) // 2:
+            raise ValueError(
+                f"rotate_circulant offsets must lie in [1, (n-1)//2] so "
+                f"±d stay distinct under rotation; got {max(offs)} with "
+                f"n={n}")
+        return TopologySchedule(spec=spec, base=base,
+                                representation="circulant", n=n,
+                                base_offsets=tuple(offs))
+    if spec.kind == "static":
+        return TopologySchedule(spec=spec, base=base,
+                                representation=representation, n=n)
+    # anneal_density / resample_er — dense or sparse refresh paths
+    rep = representation
+    if rep == "auto":
+        rep = topology_repr.select_representation(adj)
+        if rep == "circulant":
+            rep = "sparse"
+    if rep == "circulant":
+        raise ValueError(f"{spec.kind} schedules redraw arbitrary ER "
+                         "graphs — circulant payloads cannot represent "
+                         "them; use dense or sparse")
+    k_max = 0
+    if rep == "sparse":
+        p_hi = max(base.p, spec.p_end or 0.0)
+        observed = int((adj != 0).sum(axis=1).max())
+        k_max = pad_k_max(n, p_hi, observed)
+    return TopologySchedule(spec=spec, base=base, representation=rep,
+                            n=n, k_max=k_max)

@@ -101,7 +101,8 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                             agent_axis_names: Tuple[str, ...] = ("data",),
                             mixing: str = "seed_replay",
                             microbatch: int = 4,
-                            topology: Optional[Topology] = None) -> Callable:
+                            topology: Optional[Topology] = None,
+                            schedule=None) -> Callable:
     """Returns step(params, adj, batch, key) -> (params', metrics).
 
     params: pytree with leading agent axis N on every leaf.
@@ -112,10 +113,21 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
 
     ``topology`` (optional): a ``core.topology_repr.Topology``. When given,
     the θ-mixing contractions dispatch on its physical representation
-    (dense einsum / neighbor gather / circulant roll-chain — DESIGN.md §3)
-    and the runtime ``adj`` argument is ignored (the step closes over the
-    topology's arrays). When None, the legacy dense behavior over the
-    runtime ``adj`` is preserved bit-for-bit.
+    (dense einsum / neighbor gather / circulant roll-chain — DESIGN.md §3),
+    the runtime ``adj`` argument is ignored (the step closes over the
+    topology's arrays; pass ``adj=None``), and NO dense view is ever
+    materialized — the seed-replay ε-scan derives each per-source weight
+    column from the live representation (``topology_repr.neighbor_column``,
+    O(N + K) per scan step), so sparse topologies keep their O(N·K)
+    footprint at fleet scale. When None, the legacy dense behavior over
+    the runtime ``adj`` is preserved bit-for-bit.
+
+    ``schedule`` (optional): a ``core.topology_sched.TopologySchedule``.
+    When given the step takes and returns the topology-schedule state —
+    ``step(params, adj, batch, key, sched_state) -> (params', metrics,
+    sched_state')`` — mixing over ``sched_state.topo`` and advancing the
+    schedule on device (DESIGN.md §9). ``topology`` is ignored in this
+    mode (the live graph lives in the state).
 
     ``mixing`` selects the ε-mixing wire format:
       * "gather" (baseline): ε is regenerated per-agent (sharded, no
@@ -130,15 +142,6 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
     sigma, alpha = ncfg.sigma, ncfg.alpha
     spmd = (agent_axis_names if len(agent_axis_names) > 1
             else agent_axis_names[0])
-    # Dense view of a non-dense topology, materialized ONCE at build time:
-    # the seed-replay ε-scan consumes per-SOURCE weight columns (already a
-    # local O(N) slice per scan step — no dense contraction), so it reads
-    # this rather than re-deriving columns from the neighbor list. The
-    # "gather" wire format regenerates ε through the representation
-    # dispatch instead and never touches a dense adjacency — don't pay
-    # the O(N²) materialization there.
-    topo_adj = (None if topology is None or mixing == "gather"
-                else topology.to_dense())
 
     def eval_loss(theta, abatch):
         """Mean loss over the agent's batch, scanned in microbatches so
@@ -164,7 +167,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         r_neg = -eval_loss(pert_neg, abatch)
         return r_pos, r_neg
 
-    def step(params, adj, batch, key):
+    def _step(params, adj, batch, key, topo_in):
         k_agents, k_beta = jax.random.split(key)
         akeys = _agent_keys(k_agents, n_agents)
         r_pos, r_neg = jax.vmap(reward_one, spmd_axis_name=spmd)(
@@ -174,11 +177,17 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         s_pos, s_neg = shaped[:n_agents], shaped[n_agents:]
         s_theta = s_pos + s_neg                  # per-source θ-mix weight
         s_eps = s_pos - s_neg                    # per-source ε-mix weight
-        topo = (topology if topology is not None
-                else topology_repr.as_topology(adj))
-        if mixing != "gather":                   # ε-scan columns (j, i)
-            adj_d = adj if topo_adj is None else topo_adj
-            w_eps = adj_d * s_eps[None, :]
+        topo = (topo_in if topo_in is not None
+                else (topology if topology is not None
+                      else topology_repr.as_topology(adj)))
+
+        def eps_col(src):
+            """Per-source ε-mix weight column a_:,src · s_eps[src] — one
+            O(N + K) representation-dispatched slice per ε-scan step (no
+            dense adjacency is ever materialized)."""
+            return topology_repr.neighbor_column(topo, src) * s_eps[src]
+
+        srcs = jnp.arange(n_agents)
         wt_sum = topology_repr.weighted_row_sum(topo, s_theta)   # (N,)
         scale = alpha / (n_agents * sigma ** 2)
 
@@ -227,10 +236,10 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                 def eps_body(carry, inp, sh=leaf.shape[1:], dt=leaf.dtype,
                              lidx=i):
                     mix_acc, best_acc = carry
-                    akey, we_col, b_i = inp
+                    akey, src, b_i = inp
                     eps_i = jax.random.normal(
                         jax.random.fold_in(akey, lidx), sh, dt)
-                    web = we_col.astype(dt).reshape(
+                    web = eps_col(src).astype(dt).reshape(
                         (n_agents,) + (1,) * len(sh))
                     return (mix_acc + web * eps_i[None],
                             best_acc + b_i.astype(dt) * eps_i), None
@@ -238,7 +247,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                 zero = jnp.zeros(leaf.shape[1:], leaf.dtype)
                 (mixed_eps, best_eps), _ = jax.lax.scan(
                     eps_body, (jnp.zeros_like(leaf), zero),
-                    (akeys, w_eps.T, onehot_dt))
+                    (akeys, srcs, onehot_dt))
                 mixed = mixed_theta + sigma * mixed_eps
                 best_pert = (jnp.einsum("i,i...->...",
                                         onehot_dt.astype(leaf.dtype), leaf)
@@ -261,12 +270,12 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
 
                     def eps_body(carry, inp):
                         mix_acc, best_acc = carry
-                        akey, we_col, b_i = inp
+                        akey, src, b_i = inp
                         eps_i = jax.random.normal(
                             jax.random.fold_in(
                                 jax.random.fold_in(akey, lidx), r_idx),
                             sh, dt)
-                        web = we_col.astype(dt).reshape(
+                        web = eps_col(src).astype(dt).reshape(
                             (n_agents,) + (1,) * len(sh))
                         return (mix_acc + web * eps_i[None],
                                 best_acc + b_i.astype(dt) * eps_i), None
@@ -274,7 +283,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                     zero = jnp.zeros(sh, dt)
                     (mixed_eps, best_eps), _ = jax.lax.scan(
                         eps_body, (jnp.zeros_like(leaf_r), zero),
-                        (akeys, w_eps.T, onehot_dt))
+                        (akeys, srcs, onehot_dt))
                     mixed_r = mixed_theta + sigma * mixed_eps
                     best_r = (jnp.einsum("i,i...->...",
                                          onehot_dt.astype(dt), leaf_r)
@@ -306,6 +315,17 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         }
         return new_params, metrics
 
+    if schedule is not None:
+        def sched_step(params, adj, batch, key, sched_state):
+            new_params, metrics = _step(params, adj, batch, key,
+                                        sched_state.topo)
+            return new_params, metrics, schedule.advance(sched_state)
+
+        return sched_step
+
+    def step(params, adj, batch, key):
+        return _step(params, adj, batch, key, None)
+
     return step
 
 
@@ -315,19 +335,24 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
 
 def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                               n_pop: int,
-                              topology: Optional[Topology] = None) -> Callable:
+                              topology: Optional[Topology] = None,
+                              schedule=None) -> Callable:
     """Returns step(params, adj, batch, key) -> (params', metrics).
 
     params: ONE shared tree (no agent axis). batch leaves:
     (n_pop, microbatch, ...) — member i is evaluated on microbatch i.
     The topology enters only through per-agent degree weights (DESIGN.md
     §7.4); with a ``Topology`` given, degrees come from the representation
-    (``topo.deg``) and the runtime ``adj`` argument is ignored.
+    (``topo.deg``) and the runtime ``adj`` argument is ignored. With a
+    ``schedule`` (``core.topology_sched.TopologySchedule``), the step
+    takes/returns the schedule state — ``step(params, adj, batch, key,
+    sched_state) -> (params', metrics, sched_state')`` — reading the
+    live degrees from ``sched_state.topo.deg`` and advancing on device.
     """
     sigma, alpha = ncfg.sigma, ncfg.alpha
     topo_deg = None if topology is None else topology.deg
 
-    def step(params, adj, batch, key):
+    def _step(params, adj, batch, key, deg_in):
         k_agents, k_beta = jax.random.split(key)
         akeys = _agent_keys(k_agents, n_pop)
 
@@ -344,8 +369,11 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         raw = jnp.concatenate([r_pos, r_neg])
         shaped = es_utils.centered_rank(raw)
         w_eps = shaped[:n_pop] - shaped[n_pop:]          # (P,)
-        degree = (adj.sum(axis=0) if topo_deg is None
-                  else topo_deg) / n_pop                 # topology weighting
+        if deg_in is not None:
+            degree = deg_in / n_pop                      # scheduled degrees
+        else:
+            degree = (adj.sum(axis=0) if topo_deg is None
+                      else topo_deg) / n_pop             # topology weighting
         coeff = w_eps * degree                           # (P,)
         # broadcast candidate over BOTH ±ε halves (same fix as netes_step)
         best_flat = jnp.argmax(raw)
@@ -389,6 +417,17 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
             "broadcast": do_bcast.astype(jnp.float32),
         }
         return new_params, metrics
+
+    if schedule is not None:
+        def sched_step(params, adj, batch, key, sched_state):
+            new_params, metrics = _step(params, adj, batch, key,
+                                        sched_state.topo.deg)
+            return new_params, metrics, schedule.advance(sched_state)
+
+        return sched_step
+
+    def step(params, adj, batch, key):
+        return _step(params, adj, batch, key, None)
 
     return step
 

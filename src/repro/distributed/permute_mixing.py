@@ -20,6 +20,7 @@ subprocess so the single-device test session stays clean).
 """
 from __future__ import annotations
 
+import math
 from typing import Sequence
 
 import jax
@@ -138,3 +139,56 @@ def make_topology_mixing(mesh: Mesh, axis: str, topo: Topology):
     if topo.kind == "sparse":
         return make_sparse_gather_mixing(mesh, axis, topo)
     return make_allgather_mixing(mesh, axis)
+
+
+# ---------------------------------------------------------------------------
+# scheduled (rotating) circulants — DESIGN.md §9
+# ---------------------------------------------------------------------------
+
+def make_rotating_permute_mixing(mesh: Mesh, axis: str,
+                                 offsets: Sequence[int], stride: int):
+    """Rotating-circulant backend: ``mix(weights, thetas, t) -> (N, D)``.
+
+    The ``rotate_circulant`` schedule maps offset d to
+    ((d − 1 + t·stride) mod m) + 1 with m = (n−1)//2, so the offset sets
+    cycle with period m / gcd(stride, m). ``lax.ppermute`` needs a STATIC
+    permutation, so the schedule compiles every phase's chain once and
+    ``lax.switch``es on ``t mod cycle`` — the branch index is replicated
+    (same t on every chip), so all chips take the same chain and the
+    collective stays deadlock-free. Every phase moves exactly |±Δ| hops
+    of D floats: the rotation is wire-free (zero EXTRA bytes vs the
+    static circulant), paying only compile time ∝ the cycle length —
+    fine at mesh scale (cycle ≤ (n−1)//2 with n = device count).
+    """
+    n = mesh.shape[axis]
+    m = max(1, (n - 1) // 2)
+    if offsets and max(offsets) > m:
+        raise ValueError(f"rotating offsets must lie in [1, {m}] (n={n})")
+    cycle = m // math.gcd(stride % m or m, m)
+
+    def chain(offs):
+        def local_chain(weights, theta):
+            j = jax.lax.axis_index(axis)
+            acc = weights[j, j] * theta
+            recv = theta
+            prev_shift = 0
+            for d in signed_offsets(offs, n):
+                step = (d - prev_shift) % n
+                perm = [(src, (src - step) % n) for src in range(n)]
+                recv = jax.lax.ppermute(recv, axis, perm)
+                prev_shift = d
+                src_idx = (j + d) % n
+                acc = acc + weights[j, src_idx] * recv
+            return acc
+
+        return local_chain
+
+    branches = [chain([(d - 1 + c * stride) % m + 1 for d in offsets])
+                for c in range(cycle)]
+
+    def local_mix(weights, theta, t):
+        return jax.lax.switch(t % cycle, branches, weights, theta)
+
+    return shard_map(local_mix, mesh=mesh,
+                     in_specs=(P(None, None), P(axis, None), P()),
+                     out_specs=P(axis, None))

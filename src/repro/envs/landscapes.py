@@ -11,6 +11,7 @@ Rewards are negated costs (higher is better); optimum value is 0 at x*=0
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict
 
 import jax
@@ -56,6 +57,7 @@ LANDSCAPES: Dict[str, Callable] = {
 }
 
 
+@functools.lru_cache(maxsize=None)
 def make_landscape_reward_fn(name: str, noise_std: float = 0.0) -> Callable:
     """Returns reward_fn(params (M, D), key) -> (M,) for NetES.
 
@@ -66,6 +68,12 @@ def make_landscape_reward_fn(name: str, noise_std: float = 0.0) -> Callable:
     of the population, which for a symmetric init IS the origin-optimum.
     Shifting (as in BBOB) removes that artifact; the paper's RL reward
     landscapes have no such centering.
+
+    Memoized per (name, noise_std): the returned closure is a jit-static
+    argument of ``netes_step``/``netes.run`` — a fresh closure per
+    training run would miss every jit cache and recompile the fused scan
+    on each ``train_rl_netes`` call (the fleet bench's steady-state
+    compile-count gate relies on this).
     """
     shift = 0.0
     if "@" in name:

@@ -8,6 +8,7 @@ brief requires: stand-ins for every model input of each
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -17,9 +18,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import ModelConfig
-from repro.core import topology_repr
+from repro.core import topology_repr, topology_sched
 from repro.core.netes import NetESConfig
 from repro.core.topology import TopologySpec
+from repro.core.topology_sched import ScheduleSpec
 from repro.distributed import netes_dist, sharding
 from repro.models import transformer
 
@@ -48,6 +50,13 @@ class PairSpec:
     the lowered HLO carries the sparse/circulant mixing backend — closing
     over the topology and IGNORING the runtime ``adj`` input (DESIGN.md
     §3).
+
+    ``sched`` is the serializable ScheduleSpec for a time-varying
+    topology (requires ``topo``): ``build_step`` compiles it with the
+    topology into a ``core.topology_sched.TopologySchedule``, the step
+    gains a trailing ``sched`` argument (the scan-compatible
+    ``ScheduleState``) and returns the advanced state — the lowered HLO
+    contains the ON-DEVICE graph update (DESIGN.md §9).
     """
     arch: str
     shape_name: str
@@ -56,10 +65,15 @@ class PairSpec:
     cfg: ModelConfig
     n_agents: int
     topo: Optional[TopologySpec] = None
+    sched: Optional[ScheduleSpec] = None
 
 
 def classify(arch: str, shape_name: str, mesh: Mesh,
-             topo_spec: Optional[TopologySpec] = None) -> PairSpec:
+             topo_spec: Optional[TopologySpec] = None,
+             sched_spec: Optional[ScheduleSpec] = None) -> PairSpec:
+    if sched_spec is not None and topo_spec is None:
+        raise ValueError("a topology schedule needs a TopologySpec to "
+                         "schedule (pass topo_spec)")
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     kind = shape["kind"]
@@ -80,9 +94,12 @@ def classify(arch: str, shape_name: str, mesh: Mesh,
             topo = (topo_spec if topo_spec.n_agents == n
                     else dataclasses.replace(topo_spec, n_agents=n))
     else:
+        if sched_spec is not None:
+            raise ValueError(f"topology schedules only apply to train "
+                             f"shapes, not {kind!r}")
         mode, n = "serve", 0
     return PairSpec(arch=arch, shape_name=shape_name, mode=mode, kind=kind,
-                    cfg=cfg, n_agents=n, topo=topo)
+                    cfg=cfg, n_agents=n, topo=topo, sched=sched_spec)
 
 
 # ---------------------------------------------------------------------------
@@ -144,10 +161,13 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def input_specs(arch: str, shape_name: str, mesh: Mesh,
                 dtype=PARAM_DTYPE,
-                topo_spec: Optional[TopologySpec] = None) -> Dict[str, Any]:
+                topo_spec: Optional[TopologySpec] = None,
+                sched_spec: Optional[ScheduleSpec] = None) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every input of the lowered step
-    (params, adjacency, batch/cache, rng key), plus their PartitionSpecs."""
-    pair = classify(arch, shape_name, mesh, topo_spec=topo_spec)
+    (params, adjacency, batch/cache, rng key, schedule state), plus their
+    PartitionSpecs."""
+    pair = classify(arch, shape_name, mesh, topo_spec=topo_spec,
+                    sched_spec=sched_spec)
     cfg = pair.cfg
     shape = INPUT_SHAPES[shape_name]
     seq, gbatch = shape["seq_len"], shape["global_batch"]
@@ -173,6 +193,14 @@ def input_specs(arch: str, shape_name: str, mesh: Mesh,
                                                  mesh),
             "key": P(),
         }
+        if pair.sched is not None:
+            # schedule state: abstract shapes from a concrete init()
+            # (host-side numpy — not eval_shape-able), replicated: the
+            # topology arrays are O(N·K) metadata every chip reads.
+            state = _compile_pair_schedule(pair).init()
+            args["sched"] = jax.tree.map(
+                lambda l: SDS(tuple(l.shape), l.dtype), state)
+            specs["sched"] = jax.tree.map(lambda _: P(), args["sched"])
     elif pair.kind == "prefill":
         batch_abs = _serve_batch_specs(cfg, seq, gbatch, dtype)
         args = {"params": params_abs, "batch": batch_abs}
@@ -203,23 +231,44 @@ def input_specs(arch: str, shape_name: str, mesh: Mesh,
 # step builders for lowering
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _compile_schedule_cached(sched_spec: ScheduleSpec,
+                             topo_spec: TopologySpec):
+    return topology_sched.compile_schedule(sched_spec, topo_spec)
+
+
+def _compile_pair_schedule(pair: PairSpec):
+    """Memoized per (sched, topo) spec pair: compile_schedule builds the
+    O(N²) base graph host-side, and both ``input_specs`` (for the
+    abstract schedule-state shapes) and ``build_step`` need the compiled
+    schedule — without the cache ``lower_pair`` would generate the base
+    graph twice."""
+    return _compile_schedule_cached(pair.sched, pair.topo)
+
+
 def build_step(pair: PairSpec, mesh: Mesh,
                ncfg: Optional[NetESConfig] = None):
     """Returns (fn, arg_order) — fn takes the args dict's values in order."""
     ncfg = ncfg or NetESConfig()
     cfg = pair.cfg
     if pair.kind == "train":
+        schedule = (_compile_pair_schedule(pair)
+                    if pair.sched is not None else None)
         topo = (topology_repr.from_spec(pair.topo)
-                if pair.topo is not None else None)
+                if pair.topo is not None and schedule is None else None)
         if pair.mode == "replica":
             step = netes_dist.make_replica_train_step(
                 cfg, ncfg, pair.n_agents, sharding.agent_axes(mesh),
-                topology=topo)
+                topology=topo, schedule=schedule)
         else:
             step = netes_dist.make_consensus_train_step(cfg, ncfg,
                                                         pair.n_agents,
-                                                        topology=topo)
-        return step, ("params", "adj", "batch", "key")
+                                                        topology=topo,
+                                                        schedule=schedule)
+        order = ("params", "adj", "batch", "key")
+        if schedule is not None:
+            order = order + ("sched",)
+        return step, order
     if pair.kind == "prefill":
         return netes_dist.make_prefill_step(cfg), ("params", "batch")
     decode = netes_dist.make_decode_step(cfg)
@@ -235,9 +284,11 @@ def named_shardings(mesh: Mesh, spec_tree: Any) -> Any:
 
 def lower_pair(arch: str, shape_name: str, mesh: Mesh,
                ncfg: Optional[NetESConfig] = None, dtype=PARAM_DTYPE,
-               topo_spec: Optional[TopologySpec] = None):
+               topo_spec: Optional[TopologySpec] = None,
+               sched_spec: Optional[ScheduleSpec] = None):
     """Lower one (arch × shape × mesh). Returns (lowered, pair)."""
-    info = input_specs(arch, shape_name, mesh, dtype, topo_spec=topo_spec)
+    info = input_specs(arch, shape_name, mesh, dtype, topo_spec=topo_spec,
+                       sched_spec=sched_spec)
     pair = info["pair"]
     fn, order = build_step(pair, mesh, ncfg)
     args = [info["args"][k] for k in order]

@@ -30,6 +30,13 @@ def main() -> None:
                     choices=["auto", "dense", "sparse", "circulant"],
                     help="physical topology representation (DESIGN.md §3)")
     ap.add_argument("--topo-seed", type=int, default=0)
+    ap.add_argument("--schedule", default=None,
+                    help="time-varying topology, e.g. 'resample_er("
+                         "period=8)' or 'rotate_circulant(stride=1)' "
+                         "(DESIGN.md §9)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="save train state at every eval point and "
+                         "resume from it if present (rl only)")
     ap.add_argument("--agents", type=int, default=32)
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
@@ -45,6 +52,8 @@ def main() -> None:
         topology=TopologySpec(family=args.topology, n_agents=args.agents,
                               p=args.density, seed=args.topo_seed),
         representation=args.representation,
+        schedule=args.schedule,
+        checkpoint_dir=args.checkpoint_dir,
         seed=args.seed,
         netes=NetESConfig(alpha=args.alpha, sigma=args.sigma,
                           p_broadcast=args.p_broadcast))

@@ -10,23 +10,31 @@
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
 from repro.configs.base import ModelConfig
-from repro.core import netes, topology, topology_repr
+from repro.core import netes, topology_repr, topology_sched
 from repro.core.netes import NetESConfig
 from repro.core.topology import TopologySpec
+from repro.core.topology_sched import ScheduleSpec, TopologySchedule
 from repro.data import make_batch
 from repro.distributed import netes_dist
 from repro.envs import ENVS, MLPPolicy, make_env_reward_fn, \
     make_landscape_reward_fn
 from repro.envs.rollout import evaluate_best
 from repro.models import transformer
+
+# How many iterations' device metrics accumulate before one host
+# transfer drains them (the per-iteration float() conversions forced a
+# device sync every step — the PR-1 bug, fixed in both loops).
+METRIC_DRAIN_CHUNK = 8
 
 
 @dataclasses.dataclass
@@ -41,9 +49,16 @@ class TrainConfig:
     topology_family: str = "erdos_renyi"
     density: float = 0.5
     topo_seed: int = 0
+    # Time-varying topology (DESIGN.md §9): a ScheduleSpec, or its string
+    # form ("resample_er(period=8)", ...) as constructor sugar.
+    schedule: Optional[Union[ScheduleSpec, str]] = None
     seed: int = 0
     eval_every: int = 0             # 0 ⇒ paper protocol (prob 0.08)
     eval_episodes: int = 16
+    # When set, train_rl_netes saves (NetES state, RNG, topology-schedule
+    # state) at every eval point and resumes from ``latest.json`` if one
+    # exists — crash-safe fleet runs.
+    checkpoint_dir: Optional[str] = None
     netes: NetESConfig = dataclasses.field(default_factory=NetESConfig)
 
     def __post_init__(self):
@@ -56,12 +71,23 @@ class TrainConfig:
             self.topology_family = self.topology.family
             self.density = self.topology.p
             self.topo_seed = self.topology.seed
+        if isinstance(self.schedule, str):
+            self.schedule = ScheduleSpec.parse(self.schedule)
 
 
 def build_topology(tc: TrainConfig) -> topology_repr.Topology:
     """TopologySpec → representation-selected Topology (DESIGN.md §3)."""
     return topology_repr.from_spec(tc.topology,
                                    representation=tc.representation)
+
+
+def build_schedule(tc: TrainConfig) -> Optional[TopologySchedule]:
+    """Compile ``tc.schedule`` against the topology spec (None if the
+    config has no schedule — static runs keep the plain-Topology path)."""
+    if tc.schedule is None:
+        return None
+    return topology_sched.compile_schedule(tc.schedule, tc.topology,
+                                           tc.representation)
 
 
 def build_adjacency(tc: TrainConfig) -> jnp.ndarray:
@@ -75,6 +101,14 @@ def train_rl_netes(task: str, tc: TrainConfig,
 
     Returns history dict with train rewards and the paper's evaluation
     metric trace (best-agent noise-free episodes).
+
+    With ``tc.schedule`` set, the topology anneals/resamples/rotates on
+    device inside the same scans (DESIGN.md §9). With
+    ``tc.checkpoint_dir`` set, the full train state — NetES state
+    (step + RNG), eval RNG, and topology-schedule state — is saved at
+    every eval point and restored from ``latest.json`` on the next call,
+    resuming mid-schedule bit-for-bit; a resumed run's history covers
+    only the post-resume iterations.
     """
     key = jax.random.PRNGKey(tc.seed)
     if task.startswith("landscape:"):
@@ -90,7 +124,11 @@ def train_rl_netes(task: str, tc: TrainConfig,
         dim = policy.num_params
         init_fn = policy.init
 
-    topo = build_topology(tc)
+    schedule = build_schedule(tc)
+    if schedule is not None:
+        topo, sstate = None, schedule.init()
+    else:
+        topo, sstate = build_topology(tc), None
     state = netes.init_state(key, tc.n_agents, dim, init_fn=init_fn)
     history: Dict[str, List] = {"reward_mean": [], "reward_max": [],
                                 "eval": [], "eval_iter": []}
@@ -121,17 +159,47 @@ def train_rl_netes(task: str, tc: TrainConfig,
             np.asarray(m["reward_max"], np.float64).reshape(-1).tolist())
 
     eval_key = jax.random.PRNGKey(tc.seed + 999)
-    start = 0
+
+    # ---- crash-safe resume (checkpoint/io): restore (NetES state, eval
+    # RNG, schedule state) saved at the last completed eval point.
+    def _blob():
+        blob = {"netes": state, "eval_key": eval_key}
+        if sstate is not None:
+            blob["sched"] = sstate
+        return blob
+
+    ckpt_dir = pathlib.Path(tc.checkpoint_dir) if tc.checkpoint_dir \
+        else None
+    resume_iter = -1
+    if ckpt_dir is not None and (ckpt_dir / "latest.json").exists():
+        resume_iter, restored = checkpoint.restore_train_state(ckpt_dir,
+                                                               _blob())
+        state, eval_key = restored["netes"], restored["eval_key"]
+        sstate = restored.get("sched", sstate)
+
+    start = resume_iter + 1
     for it in eval_iters:
+        if it <= resume_iter:
+            continue            # already trained + evaluated pre-crash
         todo = it - start + 1
         start = it + 1
         while todo >= scan_chunk:
-            state, m = netes.run(state, topo, reward_fn, tc.netes,
-                                 num_iters=scan_chunk)
+            if schedule is not None:
+                state, sstate, m = netes.run_scheduled(
+                    state, sstate, reward_fn, tc.netes, schedule,
+                    num_iters=scan_chunk)
+            else:
+                state, m = netes.run(state, topo, reward_fn, tc.netes,
+                                     num_iters=scan_chunk)
             drain(m)
             todo -= scan_chunk
         for _ in range(todo):   # tail < scan_chunk: jitted single steps
-            state, m = netes.netes_step(state, topo, reward_fn, tc.netes)
+            if schedule is not None:
+                state, sstate, m = netes.scheduled_step(
+                    state, sstate, reward_fn, tc.netes, schedule)
+            else:
+                state, m = netes.netes_step(state, topo, reward_fn,
+                                            tc.netes)
             drain(m)
         eval_key, k_eval = jax.random.split(eval_key)
         if env is not None:
@@ -141,6 +209,9 @@ def train_rl_netes(task: str, tc: TrainConfig,
             score = float(reward_fn(state.best_theta[None], k_eval)[0])
         history["eval"].append(score)
         history["eval_iter"].append(it)
+        if ckpt_dir is not None:
+            checkpoint.save_train_state(ckpt_dir, it, _blob(),
+                                        extra={"task": task})
         if log:
             log({"iter": it, "eval": score,
                  "reward_mean": history["reward_mean"][-1]})
@@ -164,10 +235,21 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
     """
     key = jax.random.PRNGKey(tc.seed)
     n = tc.n_agents
-    topo = build_topology(tc)
-    step = netes_dist.make_replica_train_step(
-        cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1,
-        topology=topo)
+    schedule = build_schedule(tc)
+    if schedule is not None:
+        sstate = schedule.init()
+        step = netes_dist.make_replica_train_step(
+            cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1,
+            schedule=schedule)
+    else:
+        sstate = None
+        # The step dispatches on (and closes over) the Topology itself —
+        # no dense (N, N) view is materialized anywhere (the old
+        # ``adj = topo.to_dense()`` defeated the sparse representation's
+        # O(N·K) footprint at fleet scale).
+        step = netes_dist.make_replica_train_step(
+            cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1,
+            topology=build_topology(tc))
     step = jax.jit(step)
     if same_init:
         p0 = transformer.init_params(key, cfg)
@@ -176,8 +258,22 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
     else:
         params = jax.vmap(lambda k: transformer.init_params(k, cfg))(
             jax.random.split(key, n))
-    adj = topo.to_dense()   # step dispatches on topo; adj kept for the API
     history: Dict[str, List] = {"loss_mean": [], "reward_max": []}
+
+    # Metrics stay on device and are drained once per chunk — the
+    # per-iteration float() conversions forced a device sync every step
+    # (the PR-1 train_rl_netes bug, same fix here).
+    pending: List = []
+
+    def drain():
+        for it, mv in zip([i for i, _ in pending],
+                          jax.device_get([m for _, m in pending])):
+            history["loss_mean"].append(float(mv["loss_mean"]))
+            history["reward_max"].append(float(mv["reward_max"]))
+            if log and it % 10 == 0:
+                log({"iter": it, "loss": history["loss_mean"][-1]})
+        pending.clear()
+
     for it in range(tc.iters):
         key, k_batch, k_step = jax.random.split(key, 3)
         batch = make_batch(cfg, dict(seq_len=seq_len,
@@ -185,9 +281,12 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
                            k_batch)
         batch = jax.tree.map(
             lambda x: x.reshape((n, per_agent_batch) + x.shape[1:]), batch)
-        params, m = step(params, adj, batch, k_step)
-        history["loss_mean"].append(float(m["loss_mean"]))
-        history["reward_max"].append(float(m["reward_max"]))
-        if log and it % 10 == 0:
-            log({"iter": it, "loss": history["loss_mean"][-1]})
+        if schedule is not None:
+            params, m, sstate = step(params, None, batch, k_step, sstate)
+        else:
+            params, m = step(params, None, batch, k_step)
+        pending.append((it, m))
+        if len(pending) >= METRIC_DRAIN_CHUNK:
+            drain()
+    drain()
     return history

@@ -82,6 +82,23 @@ with mesh:
 np.testing.assert_allclose(
     np.asarray(out_w), np.asarray(jnp.einsum("ji,id->jd", wweights, thetas)),
     rtol=1e-5, atol=1e-5, err_msg="weighted-sparse")
+
+# rotating circulant (DESIGN.md §9): the lax.switch-over-ppermute-chains
+# backend must equal the offset-walk oracle on the ROTATED offsets at
+# every step of the cycle (and wrap around it)
+from repro.distributed.permute_mixing import make_rotating_permute_mixing
+stride, m_half = 1, (n - 1) // 2
+rot_offsets = [1, 3]
+mix_rot = make_rotating_permute_mixing(mesh, "data", rot_offsets, stride)
+with mesh:
+    jmix_rot = jax.jit(mix_rot)
+    for t in range(m_half + 2):
+        out_t = jmix_rot(weights, thetas, jnp.int32(t))
+        offs_t = [(d - 1 + t * stride) % m_half + 1 for d in rot_offsets]
+        np.testing.assert_allclose(
+            np.asarray(out_t),
+            np.asarray(circulant_mixing_ref(weights, thetas, offs_t)),
+            rtol=1e-5, atol=1e-5, err_msg=f"rotating t={t}")
 print("PERMUTE_MIXING_OK")
 """
 
