@@ -1,0 +1,128 @@
+"""Topology-search tournaments, benchmarked (DESIGN.md §10).
+
+Three legs:
+
+* ``search.fig2_er_vs_fc`` — the acceptance demo: a seeded
+  Erdos-Renyi-vs-fully-connected tournament on the Fig. 2A task
+  (cartpole swing-up). Asserts the winner is ER-family AND beats the
+  fully-connected control's eval score; ``eval_score`` stores the
+  winner-minus-control margin so the regression gate defends it.
+* ``search.tournament257`` — tournament wall-time and steady-state
+  per-candidate step cost at N = 257 (mixed dense + sparse cohorts on
+  the rastrigin landscape).
+* ``search.tournament1024`` — the same at the paper's N ≈ 1000 regime
+  (quick/full profiles: the 1024-agent cohort programs take minutes of
+  XLA compile on the CI box, so ci gates the 257-point instead).
+
+Every leg runs its tournament TWICE: a warm-up that compiles each
+round's cohort program, then a timed replay under
+``common.count_backend_compiles`` that must trigger **zero** XLA
+compilations — the "whole tournament is one compiled program per round
+shape, zero per-candidate retraces" acceptance gate. The replay also
+re-asserts determinism: both runs must produce identical histories.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.netes import NetESConfig
+from repro.search import SearchConfig, run_search
+
+from . import common, registry
+
+
+def _tournament(name: str, task: str, sc: SearchConfig):
+    """Warm-up + compile-gated timed run. Returns (result, wall_s,
+    compiles, candidate_iters)."""
+    warm = run_search(task, sc)
+    t0 = time.time()
+    with common.count_backend_compiles() as counts:
+        result = run_search(task, sc)
+    wall = time.time() - t0
+    assert result.history == warm.history, (
+        f"{name}: tournament is not deterministic under a fixed config")
+    assert len(counts) == 0, (
+        f"{name}: timed tournament compiled {len(counts)}× after warm-up "
+        "— a round left the jitted cohort program (per-candidate "
+        "retrace?)")
+    cand_iters = sum(r["iters"] * len(r["scores"]) for r in result.history)
+    return result, wall, len(counts), cand_iters
+
+
+def _entry(name: str, result, wall, compiles, cand_iters, eval_score):
+    step_us = wall / max(1, cand_iters) * 1e6
+    common.emit(name, wall,
+                f"winner={result.winner.label()} "
+                f"cand_iters={cand_iters} step_us={step_us:.0f} "
+                f"compiles={compiles}")
+    return registry.Entry(
+        name=name,
+        wall_s=wall,
+        eval_score=eval_score,
+        extra={"winner": result.winner.label(),
+               "winner_score": result.score,
+               "control_scores": result.control_scores,
+               "pool": [c.label() for c in result.pool],
+               "n_agents": result.n_agents,
+               "rounds": len(result.history),
+               "candidate_iters": cand_iters,
+               "per_candidate_step_us": step_us,
+               "timed_compiles": compiles,
+               "search_wall_s": result.wall_s})
+
+
+def fig2_er_vs_fc(quick: bool = False):
+    """ER-family winner must beat the FC control on the Fig. 2A task."""
+    sc = SearchConfig(
+        n_agents=24, families=("erdos_renyi", "fully_connected"),
+        densities=(0.1, 0.2, 0.5), seeds=(0, 1), pool_size=6,
+        round_iters=10, eval_episodes=4, seed=0,
+        netes=NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8))
+    result, wall, compiles, ci = _tournament("search.fig2_er_vs_fc",
+                                             "cartpole_swingup", sc)
+    fc = result.control_scores["fully_connected"]
+    assert result.winner.topo.family == "erdos_renyi", (
+        f"expected an ER-family winner, got {result.winner.label()}")
+    assert result.score > fc, (
+        f"winner {result.winner.label()} ({result.score:.2f}) does not "
+        f"beat the fully-connected control ({fc:.2f})")
+    return [_entry("search.fig2_er_vs_fc", result, wall, compiles, ci,
+                   eval_score=result.score - fc)]
+
+
+def tournament_landscape(n: int, quick: bool = False):
+    """Perf point: mixed-family tournament on rastrigin-64d at size n."""
+    if n >= 1000:
+        pool, iters, eval_eps = 3, 2, 1
+        densities = (0.05, 0.1)
+    elif quick:
+        pool, iters, eval_eps = 5, 6, 1
+        densities = (0.05, 0.1, 0.2)
+    else:
+        pool, iters, eval_eps = 12, 16, 2
+        densities = (0.05, 0.1, 0.2, 0.33)
+    sc = SearchConfig(
+        n_agents=n,
+        families=("erdos_renyi", "small_world", "fully_connected"),
+        densities=densities, seeds=(0, 1), pool_size=pool,
+        round_iters=iters, eval_episodes=eval_eps, seed=0,
+        netes=NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8))
+    name = f"search.tournament{n}"
+    result, wall, compiles, ci = _tournament(
+        name, "landscape:rastrigin@2.5", sc)
+    return [_entry(name, result, wall, compiles, ci,
+                   eval_score=result.score)]
+
+
+def run(quick: bool = False, big: bool = False):
+    entries = fig2_er_vs_fc(quick=quick)
+    entries += tournament_landscape(257, quick=quick)
+    if big:
+        entries += tournament_landscape(1024, quick=quick)
+    return entries
+
+
+@registry.register("search", group="fleet")
+def bench(ctx: registry.Context):
+    # the 1024-agent cohorts cost minutes of XLA compile — out of ci
+    return run(quick=ctx.quick, big=ctx.profile != "ci")

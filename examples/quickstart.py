@@ -1,14 +1,16 @@
-"""Quickstart: NetES in ~40 lines — four communication topologies racing on
-a shifted rastrigin landscape, reproducing the paper's core mechanic.
+"""Quickstart: NetES in ~50 lines — four communication topologies racing
+on a shifted rastrigin landscape via the spec-based API, then the
+topology SEARCH subsystem picking a graph automatically (DESIGN.md §10).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.core import netes, topology
+from repro.core import netes, topology, topology_repr
 from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
 from repro.envs import make_landscape_reward_fn
+from repro.search import SearchConfig, run_search
 
 
 def main():
@@ -16,19 +18,32 @@ def main():
     reward_fn = make_landscape_reward_fn("rastrigin@2.5")
     cfg = NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8)
 
+    # -- hand-picked topologies through the spec-based API --------------
     print(f"{'topology':20s} {'best reward':>12s}")
     for family in ["erdos_renyi", "scale_free", "small_world",
                    "fully_connected"]:
-        kwargs = {"p": 0.5} if family != "fully_connected" else {}
-        adj = jnp.asarray(topology.make_topology(family, n_agents, seed=0,
-                                                 **kwargs))
+        spec = TopologySpec(family=family, n_agents=n_agents, p=0.5,
+                            seed=0)
+        topo = topology_repr.from_spec(spec)   # representation-selected
         state = netes.init_state(
             jax.random.PRNGKey(0), n_agents, dim,
             init_fn=lambda k: jax.random.normal(k, (dim,)))
-        state, metrics = netes.run(state, adj, reward_fn, cfg, iters)
+        state, metrics = netes.run(state, topo, reward_fn, cfg, iters)
+        adj = spec.build()
         print(f"{family:20s} {float(state.best_reward):12.2f}  "
-              f"(reach={topology.reachability(adj):.3f} "
+              f"(repr={topo.kind} "
+              f"reach={topology.reachability(adj):.3f} "
               f"homog={topology.homogeneity(adj):.3f})")
+
+    # -- or let the tournament pick the graph ---------------------------
+    result = run_search(
+        "landscape:rastrigin@2.5",
+        SearchConfig(n_agents=n_agents, densities=(0.1, 0.5), seeds=(0,),
+                     pool_size=4, round_iters=10, netes=cfg))
+    print(f"\nsearch winner: {result.winner.label()} "
+          f"score={result.score:.2f} "
+          f"(fully_connected control: "
+          f"{result.control_scores['fully_connected']:.2f})")
 
 
 if __name__ == "__main__":

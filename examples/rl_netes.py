@@ -1,13 +1,17 @@
-"""End-to-end RL driver (the paper's experiment): NetES with an Erdos-Renyi
-topology vs the fully-connected baseline on pendulum swing-up, with the
-paper's evaluation protocol and a checkpoint of the best policy.
+"""End-to-end RL driver (the paper's experiment): NetES with an
+Erdos-Renyi topology vs the fully-connected baseline on pendulum
+swing-up via the spec-based API, with the paper's evaluation protocol
+and a checkpoint of the best policy. ``--search`` lets the tournament
+subsystem pick the graph instead (DESIGN.md §10).
 
   PYTHONPATH=src python examples/rl_netes.py [--iters 80] [--agents 40]
+  PYTHONPATH=src python examples/rl_netes.py --task cartpole_swingup --search
 """
 import argparse
 
 from repro.checkpoint import save_train_state
 from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
 from repro.train.loop import TrainConfig, train_rl_netes
 
 
@@ -16,16 +20,40 @@ def main():
     ap.add_argument("--iters", type=int, default=60)
     ap.add_argument("--agents", type=int, default=40)
     ap.add_argument("--task", default="pendulum")
+    ap.add_argument("--search", action="store_true",
+                    help="tournament-search the topology first")
     args = ap.parse_args()
+    netes_cfg = NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8)
 
-    for family in ["erdos_renyi", "fully_connected"]:
-        tc = TrainConfig(
-            n_agents=args.agents, iters=args.iters, topology_family=family,
-            density=0.5, seed=0, eval_every=max(1, args.iters // 6),
-            netes=NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.8))
+    if args.search:
+        from repro.search import SearchConfig, run_search
+        result = run_search(args.task, SearchConfig(
+            n_agents=args.agents,
+            families=("erdos_renyi", "fully_connected"),
+            densities=(0.1, 0.2, 0.5), seeds=(0, 1), pool_size=6,
+            round_iters=10, eval_episodes=4, netes=netes_cfg))
+        print(f"search winner: {result.winner.label()} "
+              f"(fc control: "
+              f"{result.control_scores['fully_connected']:.1f})")
+        configs = [(result.winner.label(),
+                    TrainConfig.from_search_result(
+                        result, iters=args.iters,
+                        eval_every=max(1, args.iters // 6),
+                        netes=netes_cfg))]
+    else:
+        configs = [
+            (family, TrainConfig(
+                topology=TopologySpec(family=family,
+                                      n_agents=args.agents, p=0.5,
+                                      seed=0),
+                iters=args.iters, seed=0,
+                eval_every=max(1, args.iters // 6), netes=netes_cfg))
+            for family in ["erdos_renyi", "fully_connected"]]
+
+    for name, tc in configs:
         hist = train_rl_netes(args.task, tc,
-                              log=lambda d: print(f"  {family}: {d}"))
-        print(f"{family:18s} max_eval={hist['max_eval']:.1f} "
+                              log=lambda d: print(f"  {name}: {d}"))
+        print(f"{name:24s} max_eval={hist['max_eval']:.1f} "
               f"({hist['wall_s']:.0f}s)")
     save_train_state("experiments/ckpt_rl", args.iters, {"done": True})
 

@@ -10,12 +10,17 @@ statistics + their Erdos-Renyi closed-form approximations (Lemma 7.2) that
 drive Figs. 3C and 4.
 
 All functions here take *numpy or jnp* arrays and stay out of jit — the
-theory module is an analysis tool, not a training hot path.
+theory module is an analysis tool, not a training hot path — EXCEPT the
+``prior_score`` family at the bottom: the topology-search subsystem
+(``repro/search``, DESIGN.md §10) ranks candidate graphs by the Lemma 7.2
+closed forms inside its seeding/pruning pass, so those are pure ``jnp``
+scalar functions (traceable, no host numpy).
 """
 from __future__ import annotations
 
 from typing import Dict
 
+import jax.numpy as jnp
 import numpy as np
 
 from .topology import (degrees, homogeneity, homogeneity_approx, reachability,
@@ -115,3 +120,63 @@ def er_approximations(n: int, p: float) -> Dict[str, float]:
         "reachability_large_n": 1.0 / (p * np.sqrt(n)),
         "homogeneity_approx": homogeneity_approx(n, p),
     }
+
+
+# ---------------------------------------------------------------------------
+# jax-friendly theory priors — the topology-search seeding pass
+# ---------------------------------------------------------------------------
+#
+# The search subsystem scores a candidate pool by the Lemma 7.2 closed
+# forms before any training runs. These are the same formulas as
+# ``reachability_approx``/``homogeneity_approx`` above, written in pure
+# jnp so they batch/trace (unit-tested against the numpy originals in
+# tests/test_topology.py). Inputs are clipped into the formulas' valid
+# regime instead of emitting nan/inf: the search grid sweeps arbitrary
+# (n, p) corners and a nan prior would silently poison the pool ranking.
+
+_P_FLOOR = 1e-6
+
+
+def reachability_prior(n, p):
+    """Lemma 7.2 ρ̂(n, p) as a jnp scalar (≡ ``reachability_approx`` for
+    p where k_min > 0; k_min is floored at 1 — the self-loop — outside)."""
+    n = jnp.asarray(n, jnp.float32)
+    p = jnp.clip(jnp.asarray(p, jnp.float32), _P_FLOOR, 1.0)
+    kmin = p * (n - 1) - 2.0 * jnp.sqrt(
+        jnp.maximum(p * (n - 1) * (1.0 - p), 0.0))
+    kmin = jnp.maximum(kmin, 1.0)
+    return jnp.sqrt(p * p * n ** 3) / (kmin ** 2)
+
+
+def homogeneity_prior(n, p):
+    """Lemma 7.2 γ̂(n, p) as a jnp scalar (≡ ``homogeneity_approx`` on
+    the clipped density)."""
+    n = jnp.asarray(n, jnp.float32)
+    p = jnp.clip(jnp.asarray(p, jnp.float32), _P_FLOOR, 1.0)
+    return 1.0 - 8.0 * jnp.sqrt((1.0 - p) / (n * p))
+
+
+def prior_score(n, p):
+    """Exploration prior for a candidate topology: higher ⇒ more Theorem
+    7.1 exploration headroom ⇒ rank earlier in the search pool.
+
+    The Thm 7.1 bound scales like ρ·f(Θ,Ε) − γ·g(Ε) with f, g ≥ 0, so
+    ρ̂ − γ̂ is a monotone proxy for the topology-dependent part: sparser
+    graphs (higher reachability, lower homogeneity) score higher,
+    matching the paper's empirical ordering (Fig. 5). A heuristic for
+    SEEDING/PRUNING only — tournaments decide on measured eval scores.
+    Pure jnp (batches over arrays of densities; safe under jit).
+
+    Uses the paper's large-n simplification ρ̂ = 1/(p√n) rather than the
+    full ``reachability_prior``: the full form's k_min floor makes it
+    NON-monotone at small n (e.g. ρ̂(24, 0.2) > ρ̂(24, 0.1)), which
+    would invert the seeding order the docstring promises. Density is
+    clipped below at the ER connectivity threshold ln(n)/n — beneath it
+    the Lemma 7.2 forms are invalid (and ρ̂ diverges as p → 0, which
+    would rank degenerate near-empty graphs above every real candidate).
+    """
+    n = jnp.asarray(n, jnp.float32)
+    p_conn = jnp.log(jnp.maximum(n, 2.0)) / jnp.maximum(n, 2.0)
+    p = jnp.clip(jnp.asarray(p, jnp.float32), p_conn, 1.0)
+    rho = 1.0 / (p * jnp.sqrt(n))
+    return rho - homogeneity_prior(n, p)

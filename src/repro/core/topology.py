@@ -227,8 +227,15 @@ def circulant_from_offsets(n: int, offsets) -> Array:
 
 
 def circulant_offsets(adj: Array) -> Optional[list]:
-    """If ``adj`` is circulant, return its generator offsets, else None."""
+    """If ``adj`` is circulant, return its generator offsets, else None.
+
+    Degenerate inputs are circulant too: N = 0 and N = 1 both return the
+    empty offset list (the search sweeps hit these corners — they must
+    classify, not raise).
+    """
     n = adj.shape[0]
+    if n == 0:
+        return []
     row0 = adj[0]
     idx = np.arange(n)
     for i in range(n):
@@ -265,11 +272,18 @@ def reachability(adj: Array) -> float:
     the operational definition here; ``reachability_frobenius`` is the
     literal-text variant. Both decrease with density, so the qualitative
     claims are unaffected — recorded in DESIGN.md.
+
+    A graph with a degree-0 node (no self-loop, no edges) has ρ = ∞
+    rather than a ZeroDivisionError; N = 0 returns 0.0.
     """
     a = np.asarray(adj, dtype=np.float64)
+    if a.shape[0] == 0:
+        return 0.0
     a2 = a @ a
     paths2 = float(a2.sum())
     dmin = float(degrees(a).min())
+    if dmin == 0.0:
+        return float("inf")
     return float(np.sqrt(paths2)) / (dmin ** 2)
 
 
@@ -281,8 +295,14 @@ def reachability_frobenius(adj: Array) -> float:
 
 
 def homogeneity(adj: Array) -> float:
-    """γ(G) = (min_l |A_l| / max_l |A_l|)² — paper §7 ("homogeneity")."""
+    """γ(G) = (min_l |A_l| / max_l |A_l|)² — paper §7 ("homogeneity").
+
+    Edgeless graphs (max degree 0, incl. N = 0) return the vacuous 1.0
+    instead of dividing by zero.
+    """
     d = degrees(adj)
+    if d.size == 0 or float(d.max()) == 0.0:
+        return 1.0
     return float((d.min() / d.max()) ** 2)
 
 
@@ -298,15 +318,23 @@ def homogeneity_approx(n: int, p: float) -> float:
 
 
 def density(adj: Array) -> float:
-    """Fraction of possible off-diagonal undirected edges present."""
+    """Fraction of possible off-diagonal undirected edges present.
+
+    N < 2 has no off-diagonal edge slots; density is 0.0, not 0/0."""
     a = np.asarray(adj)
     n = a.shape[0]
+    if n < 2:
+        return 0.0
     off = a.sum() - np.trace(a)
     return float(off / (n * (n - 1)))
 
 
 def is_connected(adj: Array) -> bool:
-    return int(_components(np.asarray(adj)).max()) == 0
+    """Single connected component? N ≤ 1 is vacuously connected."""
+    adj = np.asarray(adj)
+    if adj.shape[0] <= 1:
+        return True
+    return int(_components(adj).max()) == 0
 
 
 @dataclasses.dataclass(frozen=True)

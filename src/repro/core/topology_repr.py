@@ -268,6 +268,95 @@ def as_topology(t: Union[Topology, Array, np.ndarray]) -> Topology:
 
 
 # ---------------------------------------------------------------------------
+# batched (stacked) topologies — the tournament vmap axis (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# The topology-search tournaments run S candidate graphs as ONE compiled
+# program by vmapping the training scan over a candidate axis. ``stack``
+# builds the batched operand: same-kind, same-n topologies whose array
+# leaves gain a leading S axis while the pytree aux (kind, n, offsets)
+# stays shared/static — exactly what ``jax.vmap(..., in_axes=0)`` expects.
+# A stacked Topology is ONLY for vmapped consumption (``to_dense`` etc.
+# assume unbatched leaves); ``unstack`` recovers the per-candidate views.
+
+def widen_sparse(topo: Topology, k_max: int) -> Topology:
+    """Re-pad a sparse topology to a larger static ``k_max`` (padded
+    slots index the row itself with weight 0 — the payload convention),
+    so candidates of different max degree can share one batched shape."""
+    if topo.kind != "sparse":
+        raise ValueError(f"widen_sparse needs a sparse topology, "
+                         f"got {topo.kind!r}")
+    pad = k_max - topo.k_max
+    if pad < 0:
+        raise ValueError(f"cannot narrow k_max {topo.k_max} -> {k_max}")
+    if pad == 0:
+        return topo
+    self_idx = jnp.tile(jnp.arange(topo.n, dtype=jnp.int32)[:, None],
+                        (1, pad))
+    return dataclasses.replace(
+        topo,
+        neighbor_idx=jnp.concatenate([topo.neighbor_idx, self_idx], axis=1),
+        neighbor_mask=jnp.concatenate(
+            [topo.neighbor_mask, jnp.zeros((topo.n, pad), jnp.float32)],
+            axis=1))
+
+
+def stack(topos: Sequence[Topology], k_max: Optional[int] = None
+          ) -> Topology:
+    """Batch S same-kind, same-n topologies along a new leading axis.
+
+    * dense:     ``adj (S, N, N)``
+    * sparse:    every candidate is re-padded (``widen_sparse``) to the
+                 shared ``K_max = max(k_max arg, per-candidate K)`` —
+                 the tournament's "shared static K_max" — then
+                 ``neighbor_idx/mask (S, N, K_max)``
+    * circulant: traced ``shifts`` of equal length stack to ``(S, 2K)``;
+                 STATIC offsets live in the pytree aux and cannot vary
+                 across the batch — all members must carry the identical
+                 offset tuple (the search maps circulant candidates to
+                 sparse instead, DESIGN.md §10)
+
+    ``deg`` stacks to ``(S, N)`` in every case.
+    """
+    topos = list(topos)
+    if not topos:
+        raise ValueError("stack needs at least one topology")
+    kind, n = topos[0].kind, topos[0].n
+    for t in topos:
+        if t.kind != kind or t.n != n:
+            raise ValueError(
+                f"cannot stack mixed topologies: ({t.kind}, n={t.n}) vs "
+                f"({kind}, n={n})")
+    if kind == "sparse":
+        shared_k = max([k_max or 1] + [t.k_max for t in topos])
+        topos = [widen_sparse(t, shared_k) for t in topos]
+    if kind == "circulant":
+        traced = [t.shifts is not None for t in topos]
+        if any(traced) and not all(traced):
+            raise ValueError("cannot stack static-offset and traced-shift "
+                             "circulants together")
+        if all(traced):
+            lens = {int(t.shifts.shape[0]) for t in topos}
+            if len(lens) > 1:
+                raise ValueError(f"traced shift chains differ in length: "
+                                 f"{sorted(lens)}")
+        elif len({t.offsets for t in topos}) > 1:
+            raise ValueError(
+                "static circulant offsets are pytree aux (jit-static) and "
+                "cannot vary across a stack; use traced shifts or the "
+                "sparse representation for mixed-offset candidate pools")
+    # tree.map also re-checks aux equality via treedef matching.
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *topos)
+
+
+def unstack(stacked: Topology) -> list:
+    """Invert ``stack``: split the leading candidate axis back into a
+    list of per-candidate topologies (shared aux preserved)."""
+    s = stacked.deg.shape[0]
+    return [jax.tree.map(lambda x: x[i], stacked) for i in range(s)]
+
+
+# ---------------------------------------------------------------------------
 # signed-offset helper (shared with distributed/permute_mixing)
 # ---------------------------------------------------------------------------
 

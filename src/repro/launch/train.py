@@ -3,6 +3,10 @@
 RL (the paper's experiments):
   python -m repro.launch.train rl --task pendulum --topology erdos_renyi \
       --agents 50 --iters 150
+RL with on-device topology search first (DESIGN.md §10) — the tournament
+picks the communication graph, then training runs on the winner:
+  python -m repro.launch.train rl --task cartpole_swingup --agents 24 \
+      --iters 60 --search
 LM (NetES over a registry architecture, reduced scale):
   python -m repro.launch.train lm --arch gemma3-4b-smoke --agents 8 \
       --iters 20
@@ -40,6 +44,32 @@ def main() -> None:
     ap.add_argument("--agents", type=int, default=32)
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--search", action="store_true",
+                    help="run the topology-search tournament first and "
+                         "train on the winning graph (rl only; ignores "
+                         "--topology/--density; DESIGN.md §10)")
+    ap.add_argument("--search-families",
+                    default="erdos_renyi,fully_connected",
+                    help="comma-separated candidate families (default: "
+                         "the paper's headline ER-vs-FC comparison)")
+    ap.add_argument("--search-densities", default="0.1,0.2,0.5",
+                    help="comma-separated candidate edge densities")
+    ap.add_argument("--search-seeds", default="0,1",
+                    help="comma-separated candidate graph seeds")
+    ap.add_argument("--search-pool", type=int, default=6,
+                    help="tournament pool size after theory-prior pruning")
+    ap.add_argument("--search-iters", type=int, default=10,
+                    help="round-0 training iterations per candidate "
+                         "(doubles every halving round)")
+    ap.add_argument("--search-eval-episodes", type=int, default=4,
+                    help="noise-free eval calls averaged per candidate "
+                         "score (doubles every halving round)")
+    ap.add_argument("--search-schedules", default=None,
+                    help="comma-separated schedule candidates, e.g. "
+                         "'static,resample_er(period=8)'")
+    ap.add_argument("--search-checkpoint-dir", default=None,
+                    help="save tournament rounds; a rerun resumes after "
+                         "the last completed round")
     ap.add_argument("--alpha", type=float, default=0.05)
     ap.add_argument("--sigma", type=float, default=0.1)
     ap.add_argument("--p-broadcast", type=float, default=0.8)
@@ -47,19 +77,64 @@ def main() -> None:
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    tc = TrainConfig(
-        n_agents=args.agents, iters=args.iters,
-        topology=TopologySpec(family=args.topology, n_agents=args.agents,
-                              p=args.density, seed=args.topo_seed),
-        representation=args.representation,
-        schedule=args.schedule,
-        checkpoint_dir=args.checkpoint_dir,
-        seed=args.seed,
-        netes=NetESConfig(alpha=args.alpha, sigma=args.sigma,
-                          p_broadcast=args.p_broadcast))
+    netes_cfg = NetESConfig(alpha=args.alpha, sigma=args.sigma,
+                            p_broadcast=args.p_broadcast)
 
     def log(d):
         print(json.dumps(d))
+
+    search_payload = None
+    if args.search:
+        if args.kind != "rl":
+            ap.error("--search is rl-only (tournaments train NetES "
+                     "populations on the task's reward)")
+        if args.representation == "circulant":
+            ap.error("--representation circulant is incompatible with "
+                     "--search: tournaments batch dense/sparse payloads "
+                     "(static circulant offsets are jit-static aux), and "
+                     "the winning graph is not guaranteed circulant")
+        if args.schedule is not None:
+            ap.error("--schedule conflicts with --search (training uses "
+                     "the WINNER's schedule); add scheduled candidates "
+                     "via --search-schedules instead")
+        from repro.search import SearchConfig, run_search
+        sconf = SearchConfig(
+            n_agents=args.agents,
+            families=tuple(args.search_families.split(",")),
+            densities=tuple(float(p)
+                            for p in args.search_densities.split(",")),
+            seeds=tuple(int(s) for s in args.search_seeds.split(",")),
+            schedules=(tuple(args.search_schedules.split(","))
+                       if args.search_schedules else (None,)),
+            pool_size=args.search_pool,
+            round_iters=args.search_iters,
+            eval_episodes=args.search_eval_episodes,
+            seed=args.seed,
+            representation=args.representation,
+            checkpoint_dir=args.search_checkpoint_dir,
+            netes=netes_cfg)
+        result = run_search(args.task, sconf, log=log)
+        search_payload = result.to_json()
+        fc = result.control_scores.get("fully_connected")
+        print(f"search winner: {result.winner.label()} "
+              f"score={result.score:.3f}"
+              + (f" (fully_connected control: {fc:.3f})"
+                 if fc is not None else ""))
+        tc = TrainConfig.from_search_result(
+            result, iters=args.iters, seed=args.seed,
+            representation=args.representation,
+            checkpoint_dir=args.checkpoint_dir, netes=netes_cfg)
+    else:
+        tc = TrainConfig(
+            n_agents=args.agents, iters=args.iters,
+            topology=TopologySpec(family=args.topology,
+                                  n_agents=args.agents,
+                                  p=args.density, seed=args.topo_seed),
+            representation=args.representation,
+            schedule=args.schedule,
+            checkpoint_dir=args.checkpoint_dir,
+            seed=args.seed,
+            netes=netes_cfg)
 
     if args.kind == "rl":
         hist = train_rl_netes(args.task, tc, log=log)
@@ -73,8 +148,10 @@ def main() -> None:
     if args.out:
         path = pathlib.Path(args.out)
         path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(
-            {"args": vars(args), "history": hist}, default=str))
+        payload = {"args": vars(args), "history": hist}
+        if search_payload is not None:
+            payload["search"] = search_payload
+        path.write_text(json.dumps(payload, default=str))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,154 @@
+"""Candidate encoding + theory-prior seeding for topology search.
+
+A search candidate is a serializable ``CandidateSpec`` — a
+``TopologySpec`` (family × density × graph seed) plus an optional
+``ScheduleSpec`` (time-varying topologies search too). ``make_grid``
+expands the cross product, dropping combinations the schedule compiler
+would reject (e.g. ``rotate_circulant`` over a non-circulant family);
+``seed_pool`` ranks the grid by the Lemma 7.2 theory prior
+(``core.theory.prior_score``) and keeps the top ``pool_size``, always
+retaining the requested control families (the fully-connected baseline
+must survive pruning — the tournament's win condition is *beating* it,
+DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import theory
+from repro.core.topology import TopologySpec
+from repro.core.topology_sched import ScheduleSpec
+
+# Families with no density knob: one candidate each, independent of the
+# (densities × seeds) axes of the grid.
+CONTROL_FAMILIES = ("fully_connected", "disconnected", "star", "ring")
+
+# Families whose generators are exactly circulant — the only legal bases
+# for a rotate_circulant schedule.
+CIRCULANT_FAMILIES = ("circulant_erdos_renyi", "ring")
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateSpec:
+    """One point in the search space (serializable, hashable)."""
+
+    topo: TopologySpec
+    sched: Optional[ScheduleSpec] = None
+
+    @property
+    def scheduled(self) -> bool:
+        return self.sched is not None and self.sched.kind != "static"
+
+    def effective_p(self) -> float:
+        """Edge density the theory prior should see (the closed forms are
+        parameterized by G(n, p) density; controls get their structural
+        density)."""
+        n = max(self.topo.n_agents, 2)
+        fam = self.topo.family
+        if fam == "fully_connected":
+            return 1.0
+        if fam == "disconnected":
+            return 0.0
+        if fam == "star":
+            return 2.0 / n
+        if fam == "ring":
+            return 2.0 / (n - 1)
+        return self.topo.p
+
+    def label(self) -> str:
+        """Stable human-readable id (used in search history/logs)."""
+        t = self.topo
+        s = t.family if t.family in CONTROL_FAMILIES else \
+            f"{t.family}:p={t.p:g}:s={t.seed}"
+        if self.scheduled:
+            s += f"+{self.sched.kind}"
+        return s
+
+
+def _schedule_compatible(family: str, sched: Optional[ScheduleSpec]) -> bool:
+    if sched is None or sched.kind == "static":
+        return True
+    if sched.kind == "rotate_circulant":
+        return family in CIRCULANT_FAMILIES
+    # anneal_density / resample_er redraw ER graphs over a dense/sparse
+    # payload — any base family works, but redrawing away from a control
+    # graph makes the control meaningless; keep schedules off controls.
+    return family not in CONTROL_FAMILIES
+
+
+def make_grid(n_agents: int,
+              families: Sequence[str],
+              densities: Sequence[float],
+              seeds: Sequence[int] = (0,),
+              schedules: Sequence[Union[ScheduleSpec, str, None]] = (None,),
+              ) -> List[CandidateSpec]:
+    """Cross product families × densities × seeds × schedules, with
+    control families collapsed to one candidate each and incompatible
+    (family, schedule) pairs dropped. Deterministic order."""
+    parsed: List[Optional[ScheduleSpec]] = []
+    for s in schedules:
+        if isinstance(s, str):
+            s = ScheduleSpec.parse(s)
+        if s is not None and s.kind == "static":
+            s = None
+        if s not in parsed:
+            parsed.append(s)
+    out: List[CandidateSpec] = []
+    for family in families:
+        if family in CONTROL_FAMILIES:
+            axes = [(1.0, seeds[0] if seeds else 0)]
+        else:
+            axes = [(p, s) for p in densities for s in seeds]
+        for p, seed in axes:
+            for sched in parsed:
+                if not _schedule_compatible(family, sched):
+                    continue
+                cand = CandidateSpec(
+                    topo=TopologySpec(family=family, n_agents=n_agents,
+                                      p=p, seed=seed),
+                    sched=sched)
+                if cand not in out:
+                    out.append(cand)
+    return out
+
+
+def prior_scores(cands: Sequence[CandidateSpec]) -> np.ndarray:
+    """Theory-prior score per candidate (higher ⇒ seeded earlier) — one
+    batched ``prior_score`` evaluation, no graphs built."""
+    if not cands:
+        return np.zeros((0,), np.float64)
+    n = np.asarray([c.topo.n_agents for c in cands], np.float32)
+    p = np.asarray([c.effective_p() for c in cands], np.float32)
+    return np.asarray(theory.prior_score(n, p), np.float64)
+
+
+def seed_pool(cands: Sequence[CandidateSpec], pool_size: int,
+              keep_families: Tuple[str, ...] = ("fully_connected",),
+              ) -> List[CandidateSpec]:
+    """Prune the grid to ``pool_size`` by theory prior, force-keeping one
+    candidate of each ``keep_families`` control. Returns the pool in
+    descending-prior order (ties broken by grid position — deterministic).
+    """
+    cands = list(cands)
+    if pool_size >= len(cands):
+        return cands
+    scores = prior_scores(cands)
+    order = sorted(range(len(cands)), key=lambda i: (-scores[i], i))
+    forced = []
+    for fam in keep_families:
+        idx = next((i for i in range(len(cands))
+                    if cands[i].topo.family == fam), None)
+        if idx is not None and idx not in forced:
+            forced.append(idx)
+    keep = list(forced)
+    for i in order:
+        if len(keep) >= max(pool_size, len(forced)):
+            break
+        if i not in keep:
+            keep.append(i)
+    # pool order = prior order (forced controls slot by their own prior)
+    keep.sort(key=lambda i: (-scores[i], i))
+    return [cands[i] for i in keep]

@@ -26,8 +26,7 @@ from repro.core.topology import TopologySpec
 from repro.core.topology_sched import ScheduleSpec, TopologySchedule
 from repro.data import make_batch
 from repro.distributed import netes_dist
-from repro.envs import ENVS, MLPPolicy, make_env_reward_fn, \
-    make_landscape_reward_fn
+from repro.envs import resolve_task
 from repro.envs.rollout import evaluate_best
 from repro.models import transformer
 
@@ -74,6 +73,17 @@ class TrainConfig:
         if isinstance(self.schedule, str):
             self.schedule = ScheduleSpec.parse(self.schedule)
 
+    @classmethod
+    def from_search_result(cls, result, **overrides) -> "TrainConfig":
+        """Build a TrainConfig from a ``repro.search.SearchResult``: the
+        tournament's winning topology (and schedule, if the winner was a
+        time-varying candidate) becomes the run's communication graph.
+        Any TrainConfig field can be overridden (``iters``, ``seed``,
+        ``netes``, ...)."""
+        kw = dict(topology=result.topology, schedule=result.schedule)
+        kw.update(overrides)
+        return cls(**kw)
+
 
 def build_topology(tc: TrainConfig) -> topology_repr.Topology:
     """TopologySpec → representation-selected Topology (DESIGN.md §3)."""
@@ -111,18 +121,7 @@ def train_rl_netes(task: str, tc: TrainConfig,
     only the post-resume iterations.
     """
     key = jax.random.PRNGKey(tc.seed)
-    if task.startswith("landscape:"):
-        name = task.split(":", 1)[1]
-        reward_fn = make_landscape_reward_fn(name)
-        dim = 64
-        init_fn = lambda k: jax.random.normal(k, (dim,))  # noqa: E731
-        env = policy = None
-    else:
-        env = ENVS[task]()
-        policy = MLPPolicy(obs_dim=env.obs_dim, act_dim=env.act_dim)
-        reward_fn = make_env_reward_fn(env, policy)
-        dim = policy.num_params
-        init_fn = policy.init
+    reward_fn, dim, init_fn, env, policy = resolve_task(task)
 
     schedule = build_schedule(tc)
     if schedule is not None:
@@ -219,6 +218,22 @@ def train_rl_netes(task: str, tc: TrainConfig,
     history["max_eval"] = max(history["eval"]) if history["eval"] else None
     history["wall_s"] = time.time() - t0
     return history
+
+
+def search_topology(task: str, sconfig=None,
+                    log: Optional[Callable[[Dict], None]] = None
+                    ) -> TopologySpec:
+    """Optimize the communication graph for ``task`` and return the
+    winning ``TopologySpec`` — the paper's closing claim, operational
+    (DESIGN.md §10). ``sconfig`` is a ``repro.search.SearchConfig``
+    (defaults if None). For the full tournament record (round history,
+    control scores, a possible winning *schedule*), call
+    ``repro.search.run_search`` directly and use
+    ``TrainConfig.from_search_result``.
+    """
+    from repro.search import SearchConfig, run_search
+    result = run_search(task, sconfig or SearchConfig(), log=log)
+    return result.topology
 
 
 def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,

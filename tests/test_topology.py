@@ -98,3 +98,101 @@ def test_sparser_er_has_higher_reachability():
     r = [np.mean([topology.reachability(topology.erdos_renyi(n, p=p, seed=s))
                   for s in range(3)]) for p in (0.2, 0.5, 0.9)]
     assert r[0] > r[1] > r[2]
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs: the search grid sweeps these corners — classify,
+# don't raise
+# ---------------------------------------------------------------------------
+
+def test_degenerate_graph_statistics_do_not_raise():
+    empty = np.zeros((0, 0), np.float32)
+    one = np.ones((1, 1), np.float32)
+    assert topology.is_connected(empty) is True
+    assert topology.is_connected(one) is True
+    assert topology.circulant_offsets(empty) == []
+    assert topology.circulant_offsets(one) == []
+    assert topology.density(empty) == 0.0
+    assert topology.density(one) == 0.0
+    assert topology.reachability(empty) == 0.0
+    assert topology.homogeneity(empty) == 1.0
+    # a degree-0 node (no self-loop) gives infinite reachability, not a
+    # ZeroDivisionError; an edgeless graph is vacuously homogeneous
+    isolated = np.zeros((3, 3), np.float32)
+    isolated[0, 0] = isolated[0, 1] = isolated[1, 0] = 1.0
+    assert topology.reachability(isolated) == float("inf")
+    assert topology.homogeneity(np.zeros((3, 3), np.float32)) == 1.0
+    assert not topology.is_connected(topology.disconnected(4))
+
+
+@pytest.mark.parametrize("family", FAMILIES + ["disconnected"])
+def test_families_build_at_trivial_sizes(family):
+    for n in (1, 2, 3):
+        adj = topology.make_topology(family, n, seed=0)
+        assert adj.shape == (n, n)
+        assert np.all(np.diag(adj) == 1.0)
+        assert topology.is_connected(adj) or family == "disconnected"
+
+
+# ---------------------------------------------------------------------------
+# theory priors (jax) match the numpy Lemma 7.2 closed forms
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(50, 2000), p=st.floats(0.1, 1.0))
+def test_prior_matches_numpy_approximations(n, p):
+    from repro.core import theory
+    rho = float(theory.reachability_prior(n, p))
+    gam = float(theory.homogeneity_prior(n, p))
+    assert rho == pytest.approx(topology.reachability_approx(n, p),
+                                rel=1e-4)
+    assert gam == pytest.approx(topology.homogeneity_approx(n, p),
+                                rel=1e-4, abs=1e-5)
+    # prior_score uses the paper's large-n simplification ρ̂ = 1/(p√n)
+    # (p ≥ ln n / n here, so the connectivity clip is inactive)
+    assert float(theory.prior_score(n, p)) == pytest.approx(
+        1.0 / (p * np.sqrt(n)) - gam, rel=1e-4, abs=1e-5)
+
+
+def test_prior_score_total_and_orders_sparser_higher():
+    from repro.core import theory
+    import jax.numpy as jnp
+    # batched + degenerate densities stay finite and BOUNDED (clipped at
+    # the ER connectivity threshold — p → 0 must not rank a near-empty
+    # graph above every real candidate)
+    ps = jnp.asarray([0.0, 1e-9, 0.05, 0.5, 1.0])
+    scores = np.asarray(theory.prior_score(257, ps))
+    assert np.all(np.isfinite(scores))
+    assert scores[0] == scores[1] == pytest.approx(
+        float(theory.prior_score(257, np.log(257) / 257)))
+    # monotone: sparser ⇒ higher prior (paper Fig 5 ordering)
+    sweep = np.asarray(theory.prior_score(
+        257, jnp.asarray([0.05, 0.1, 0.3, 0.6, 1.0])))
+    assert np.all(np.diff(sweep) < 0)
+    # ... including at small n, where the full closed form's k_min floor
+    # would invert the order (ρ̂_full(24, 0.2) > ρ̂_full(24, 0.1))
+    s24 = [float(theory.prior_score(24, p)) for p in (0.1, 0.2, 0.5)]
+    assert s24[0] > s24[1] > s24[2]
+
+
+# ---------------------------------------------------------------------------
+# representation selection is total over the family zoo (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(family=st.sampled_from(FAMILIES + ["disconnected"]),
+       n=st.integers(1, 40), p=st.floats(0.05, 1.0),
+       seed=st.integers(0, 1000))
+def test_select_representation_total_and_faithful(family, n, p, seed):
+    """Any generated graph admits its selected representation, and the
+    representation reproduces the exact adjacency (search sweeps rely on
+    both)."""
+    from repro.core import topology_repr
+    kwargs = {} if family in ("fully_connected", "disconnected", "star",
+                              "ring") else {"p": p}
+    adj = topology.make_topology(family, n, seed=seed, **kwargs)
+    rep = topology_repr.select_representation(adj)
+    assert rep in ("dense", "sparse", "circulant")
+    topo = topology_repr.from_dense(adj, rep)
+    assert np.array_equal(np.asarray(topo.to_dense()), adj)
+    assert np.allclose(np.asarray(topo.deg), adj.sum(axis=1))
