@@ -35,7 +35,8 @@ from benchmarks import registry                               # noqa: E402
 for _mod in ("fig2a_families", "fig2b_size_sweep", "fig3a_broadcast",
              "fig3b_controls", "fig3c_reach_homog", "fig4_approx",
              "fig5_density", "fleet_bench", "kernel_bench", "lm_netes",
-             "roofline", "search_bench", "table1_er_vs_fc"):
+             "resilience_bench", "roofline", "search_bench",
+             "table1_er_vs_fc"):
     importlib.import_module(f"benchmarks.{_mod}")
 
 

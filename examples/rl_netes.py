@@ -49,12 +49,23 @@ def main():
                 iters=args.iters, seed=0,
                 eval_every=max(1, args.iters // 6), netes=netes_cfg))
             for family in ["erdos_renyi", "fully_connected"]]
+        # the same ER graph over a lossy wire (DESIGN.md §11): int8
+        # payloads + 10% link faults at a quarter of the traffic
+        configs.append(("erdos_renyi+q8drop", TrainConfig(
+            topology=TopologySpec(family="erdos_renyi",
+                                  n_agents=args.agents, p=0.5, seed=0),
+            channel="quantize(bits=8)|dropout(p=0.1,seed=0)",
+            iters=args.iters, seed=0,
+            eval_every=max(1, args.iters // 6), netes=netes_cfg)))
 
     for name, tc in configs:
         hist = train_rl_netes(args.task, tc,
                               log=lambda d: print(f"  {name}: {d}"))
+        wire = (f" realized_mb="
+                f"{hist['realized_wire_bytes'] / 2 ** 20:.1f}"
+                if "realized_wire_bytes" in hist else "")
         print(f"{name:24s} max_eval={hist['max_eval']:.1f} "
-              f"({hist['wall_s']:.0f}s)")
+              f"({hist['wall_s']:.0f}s){wire}")
     save_train_state("experiments/ckpt_rl", args.iters, {"done": True})
 
 

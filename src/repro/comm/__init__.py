@@ -1,0 +1,6 @@
+"""Lossy communication channels between agents (DESIGN.md §11)."""
+from .channel import (Channel, ChannelSpec, ChannelState, StageSpec,
+                      compile_channel, dropout_mask, realized_messages)
+
+__all__ = ["Channel", "ChannelSpec", "ChannelState", "StageSpec",
+           "compile_channel", "dropout_mask", "realized_messages"]

@@ -93,7 +93,8 @@ def shape_fitness(returns: jax.Array, kind: str) -> jax.Array:
 
 
 def mixing_update(adj, thetas: jax.Array, perturbed: jax.Array,
-                  shaped: jax.Array, cfg: NetESConfig) -> jax.Array:
+                  shaped: jax.Array, cfg: NetESConfig,
+                  edge_mask=None) -> jax.Array:
     """Eq. 3, dispatched on the topology's physical representation.
 
     u_j = scale_j · Σ_i a_ji R̃_i (perturbed_i − θ_j)
@@ -106,11 +107,18 @@ def mixing_update(adj, thetas: jax.Array, perturbed: jax.Array,
     three paths are parity-tested against each other in
     tests/test_topology_repr.py. The dense hot loop is fused by
     kernels/netes_mixing; the sparse one by kernels/netes_sparse_mixing.
+
+    ``edge_mask`` (DESIGN.md §11): a representation-matched live-link
+    mask from a lossy channel — a dropped link removes source i's term
+    from BOTH the neighbor sum and the self-correction weight (the
+    receiver never saw the message at all).
     """
     topo = topology_repr.as_topology(adj)
     n = thetas.shape[0]
-    mixed = topology_repr.weighted_neighbor_sum(topo, shaped, perturbed)
-    wsum = topology_repr.weighted_row_sum(topo, shaped)[:, None]
+    mixed = topology_repr.weighted_neighbor_sum(topo, shaped, perturbed,
+                                                edge_mask=edge_mask)
+    wsum = topology_repr.weighted_row_sum(topo, shaped,
+                                          edge_mask=edge_mask)[:, None]
     mixed = mixed - wsum * thetas                 # (N, D)
     if cfg.normalization == "degree":
         scale = cfg.alpha / (topo.deg[:, None] * cfg.sigma ** 2)
@@ -119,13 +127,22 @@ def mixing_update(adj, thetas: jax.Array, perturbed: jax.Array,
     return scale * mixed
 
 
-@partial(jax.jit, static_argnames=("reward_fn", "cfg"))
+@partial(jax.jit, static_argnames=("reward_fn", "cfg", "channel"))
 def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
-               cfg: NetESConfig) -> Tuple[NetESState, dict]:
+               cfg: NetESConfig, channel=None, chan_state=None):
     """One NetES iteration (paper Algorithm 1).
 
     ``reward_fn(params: (M, D), key) -> (M,)`` evaluates a batch of
     parameter vectors (episode returns). M = N (or 2N antithetic).
+
+    ``channel`` (optional): a ``comm.channel.Channel`` (jit-static) with
+    its scan-carried ``chan_state`` (DESIGN.md §11). The per-source
+    payloads entering the mixing — and the broadcast-best parameters —
+    pass through the channel's encode pipeline; dropped links mask the
+    contraction; trigger decisions and realized-traffic counters run on
+    device. Returns ``(state', chan_state', metrics)`` instead of
+    ``(state', metrics)``. A ``lossless`` channel is bit-identical to
+    the channel-free path (parity-tested in tests/test_channel.py).
     """
     n, dim = state.thetas.shape
     key, k_eps, k_eval, k_beta = jax.random.split(state.key, 4)
@@ -153,7 +170,16 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
         shaped = shape_fitness(rewards, cfg.fitness_shaping)
         candidates = perturbed
 
-    update = mixing_update(adj, state.thetas, perturbed, shaped, cfg)
+    # ---- lossy channel (DESIGN.md §11): encode the per-source payload,
+    # draw this step's live-link mask, advance the channel state ----
+    wire, edge_mask, chan_info = perturbed, None, None
+    if channel is not None:
+        topo = topology_repr.as_topology(adj)
+        wire, edge_mask, chan_state, chan_info = channel.apply(
+            chan_state, topo, perturbed)
+
+    update = mixing_update(adj, state.thetas, wire, shaped, cfg,
+                           edge_mask=edge_mask)
     update = es_utils.apply_weight_decay(state.thetas, update, cfg.weight_decay)
     new_thetas = state.thetas + update
 
@@ -163,8 +189,13 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
     iter_best_reward = rewards[best_idx]
     beta = jax.random.uniform(k_beta)
     do_broadcast = beta < cfg.p_broadcast
+    # the broadcast payload rides the same wire: lossy codecs apply
+    # (the receivers adopt the DEGRADED best — what they actually got);
+    # eval/best_theta bookkeeping keeps the true argmax parameters.
+    bcast_theta = (iter_best_theta if channel is None
+                   else channel.codec(iter_best_theta, batched=False))
     new_thetas = jnp.where(do_broadcast,
-                           jnp.broadcast_to(iter_best_theta, new_thetas.shape),
+                           jnp.broadcast_to(bcast_theta, new_thetas.shape),
                            new_thetas)
 
     better = iter_best_reward > state.best_reward
@@ -183,18 +214,42 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
         "broadcast": do_broadcast.astype(jnp.float32),
         "theta_spread": jnp.var(new_thetas, axis=0).sum(),
     }
+    if channel is not None:
+        # broadcast is one message fanned out to the population
+        bcast_msgs = do_broadcast.astype(jnp.float32) * n
+        msgs = chan_info["msgs"] + bcast_msgs
+        chan_state = chan_state._replace(msgs=chan_state.msgs + bcast_msgs)
+        metrics["msgs"] = msgs
+        metrics["trigger_frac"] = chan_info["trigger_frac"]
+        return new_state, chan_state, metrics
     return new_state, metrics
 
 
-@partial(jax.jit, static_argnames=("reward_fn", "cfg", "num_iters"))
+@partial(jax.jit,
+         static_argnames=("reward_fn", "cfg", "num_iters", "channel"))
 def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
-        cfg: NetESConfig, num_iters: int) -> Tuple[NetESState, dict]:
+        cfg: NetESConfig, num_iters: int, channel=None, chan_state=None):
     """lax.scan driver over ``netes_step`` (fully on-device training loop).
 
     Jitted at this level so repeat calls with the same shapes hit the
     executable cache: an EAGER ``lax.scan`` re-traces its body every call
     and its fresh jaxpr misses the primitive-dispatch cache, recompiling
-    the scan shell once per eval chunk."""
+    the scan shell once per eval chunk.
+
+    With a ``channel`` (DESIGN.md §11) the ``ChannelState`` joins the
+    scan carry — every encode, trigger decision, and edge drop runs
+    inside the same compiled scan — and the return value becomes
+    ``(state, chan_state, metrics)``."""
+
+    if channel is not None:
+        def cbody(carry, _):
+            s, cs = carry
+            s, cs, m = netes_step(s, adj, reward_fn, cfg, channel, cs)
+            return (s, cs), m
+
+        (state, chan_state), metrics = jax.lax.scan(
+            cbody, (state, chan_state), None, length=num_iters)
+        return state, chan_state, metrics
 
     def body(s, _):
         s, m = netes_step(s, adj, reward_fn, cfg)
@@ -208,24 +263,46 @@ def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
 # scheduled (time-varying) topologies — DESIGN.md §9
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("reward_fn", "cfg", "schedule"))
+@partial(jax.jit,
+         static_argnames=("reward_fn", "cfg", "schedule", "channel"))
 def scheduled_step(state: NetESState, sched_state, reward_fn: Callable,
-                   cfg: NetESConfig, schedule):
+                   cfg: NetESConfig, schedule, channel=None,
+                   chan_state=None):
     """One NetES iteration under a ``topology_sched.TopologySchedule``:
     step on the topology in force, then advance the schedule on device.
-    Returns ``(state', sched_state', metrics)``."""
+    Returns ``(state', sched_state', metrics)`` — with a ``channel``,
+    ``(state', sched_state', chan_state', metrics)``."""
+    if channel is not None:
+        state, chan_state, metrics = netes_step(
+            state, sched_state.topo, reward_fn, cfg, channel, chan_state)
+        return state, schedule.advance(sched_state), chan_state, metrics
     state, metrics = netes_step(state, sched_state.topo, reward_fn, cfg)
     return state, schedule.advance(sched_state), metrics
 
 
 @partial(jax.jit,
-         static_argnames=("reward_fn", "cfg", "schedule", "num_iters"))
+         static_argnames=("reward_fn", "cfg", "schedule", "num_iters",
+                          "channel"))
 def run_scheduled(state: NetESState, sched_state, reward_fn: Callable,
-                  cfg: NetESConfig, schedule, num_iters: int):
+                  cfg: NetESConfig, schedule, num_iters: int,
+                  channel=None, chan_state=None):
     """``run`` with the topology state joined into the scan carry: the
     graph anneals/resamples/rotates ON DEVICE inside one compiled scan
     (no per-resample re-trace, no host round-trips). Returns
-    ``(state, sched_state, metrics)``."""
+    ``(state, sched_state, metrics)`` — with a ``channel``, the channel
+    state joins the carry too and the return value becomes
+    ``(state, sched_state, chan_state, metrics)``."""
+
+    if channel is not None:
+        def cbody(carry, _):
+            s, ss, cs = carry
+            s, cs, m = netes_step(s, ss.topo, reward_fn, cfg, channel, cs)
+            return (s, schedule.advance(ss), cs), m
+
+        (state, sched_state, chan_state), metrics = jax.lax.scan(
+            cbody, (state, sched_state, chan_state), None,
+            length=num_iters)
+        return state, sched_state, chan_state, metrics
 
     def body(carry, _):
         s, ss = carry

@@ -384,7 +384,8 @@ def _circulant_shifts(topo: Topology):
 # ---------------------------------------------------------------------------
 
 def weighted_neighbor_sum(topo: Topology, coeff: Array,
-                          values: Array) -> Array:
+                          values: Array,
+                          edge_mask: Optional[Array] = None) -> Array:
     """``out_j = Σ_i a_ji · coeff_i · values_i`` — the Eq. 3 contraction.
 
     ``coeff (N,)``, ``values (N, ...)`` → ``(N, ...)``. Dispatches on the
@@ -393,25 +394,38 @@ def weighted_neighbor_sum(topo: Topology, coeff: Array,
     * dense:     one masked matmul — O(N²·D)
     * sparse:    K_max-step neighbor gather-accumulate — O(N·K·D)
     * circulant: |±Δ|+1 fused rolls of ``coeff ⊙ values`` — O(N·|Δ|·D)
+
+    ``edge_mask`` (optional, DESIGN.md §11) is a representation-matched
+    live-link mask from ``comm.channel.dropout_mask`` — dense ``(N, N)``,
+    sparse ``(N, K_max)``, circulant ``(|±Δ|, N)`` (per receiver, one
+    row per ring shift; the d = 0 self term never drops). A masked edge
+    contributes nothing, exactly as if ``a_ji`` were zero this step.
     """
     # Weights are formed in the coeff dtype (f32 for rank-shaped rewards)
     # and cast to the values dtype BEFORE the contraction — bit-identical
     # to the legacy `(adj * R̃).astype(leaf.dtype)` einsum in
     # distributed/netes_dist.py, so parity tests cover both call sites.
     if topo.kind == "dense":
-        w = (topo.adj * coeff[None, :]).astype(values.dtype)
+        adj = topo.adj if edge_mask is None else topo.adj * edge_mask
+        w = (adj * coeff[None, :]).astype(values.dtype)
         return jnp.einsum("ji,i...->j...", w, values)
     if topo.kind == "circulant":
         c = coeff.astype(values.dtype)
         src = c.reshape((-1,) + (1,) * (values.ndim - 1)) * values
         acc = src  # d = 0 (self-loop)
-        for d in _circulant_shifts(topo):
-            acc = acc + jnp.roll(src, -d, axis=0)
+        for k, d in enumerate(_circulant_shifts(topo)):
+            term = jnp.roll(src, -d, axis=0)
+            if edge_mask is not None:
+                term = term * edge_mask[k].astype(values.dtype).reshape(
+                    (-1,) + (1,) * (values.ndim - 1))
+            acc = acc + term
         return acc
     # sparse: loop over neighbor slots; each step is one row-gather + fma,
     # keeping transients at one (N, ...) slab (vs (N, K, ...) for a single
     # big gather). Unrolled ×4 so XLA fuses gather+fma chains.
     idx, mask = topo.neighbor_idx, topo.neighbor_mask
+    if edge_mask is not None:
+        mask = mask * edge_mask
     k_max = idx.shape[1]
     wnb = (mask * jnp.take(coeff, idx)).astype(values.dtype)    # (N, K)
 
@@ -477,7 +491,8 @@ def shift_circulant(topo: Topology, offsets: Array) -> Topology:
     return dataclasses.replace(topo, shifts=signed)
 
 
-def neighbor_column(topo: Topology, i: Array) -> Array:
+def neighbor_column(topo: Topology, i: Array,
+                    edge_mask: Optional[Array] = None) -> Array:
     """Dense column i of the adjacency — ``a_:,i`` as an (N,) vector.
 
     Used by the distributed seed-replay ε-scan, which consumes one
@@ -485,32 +500,56 @@ def neighbor_column(topo: Topology, i: Array) -> Array:
     the live representation in O(N + K) instead of materializing the
     O(N²) dense adjacency up front. Relies on symmetry (column i ≡ row
     i), which every generator guarantees (core/topology.py conventions).
+
+    ``edge_mask`` (DESIGN.md §11) masks dropped links; it must be
+    link-symmetric (``comm.channel.dropout_mask`` draws per UNDIRECTED
+    edge id, so it is) — the sparse/circulant paths read receiver-side
+    entries through row i's symmetry.
     """
     if topo.kind == "dense":
-        return topo.adj[:, i]
+        col = topo.adj[:, i]
+        return col if edge_mask is None else col * edge_mask[:, i]
     if topo.kind == "circulant":
         col = jnp.zeros((topo.n,), jnp.float32).at[i].set(1.0)
-        if topo.shifts is not None:
-            shifts = topo.shifts
-        else:
-            shifts = jnp.asarray(signed_offsets(topo.offsets, topo.n),
-                                 jnp.int32)
-        if shifts.shape[0]:
-            col = col.at[(i + shifts) % topo.n].add(1.0)
-        return col
-    # sparse: scatter row i's neighbor list (padded slots add weight 0)
+        shifts = _circulant_shifts(topo)
+        if not shifts:
+            return col
+        # receivers r = (i + d) mod n hear source i via the CONJUGATE
+        # shifts −d; with link-symmetric masks the weight of edge {i, r}
+        # is edge_mask[k, i] — row k holds the {j, j+d} links, and at
+        # j = i that IS the undirected {i, r} link. One scatter-add
+        # (shifts are distinct and nonzero, so targets never collide).
+        rs = (i + jnp.stack([jnp.asarray(d) for d in shifts])) % topo.n
+        w = (jnp.ones((len(shifts),), jnp.float32) if edge_mask is None
+             else edge_mask[:, i])
+        return col.at[rs].add(w)
+    # sparse: scatter row i's neighbor list (padded slots add weight 0);
+    # symmetric link masks let row i's mask stand in for column i's.
+    mask_row = topo.neighbor_mask[i]
+    if edge_mask is not None:
+        mask_row = mask_row * edge_mask[i]
     return jnp.zeros((topo.n,), jnp.float32).at[topo.neighbor_idx[i]].add(
-        topo.neighbor_mask[i])
+        mask_row)
 
 
-def weighted_row_sum(topo: Topology, coeff: Array) -> Array:
-    """``Σ_i a_ji · coeff_i`` per row j — the self-correction weight."""
+def weighted_row_sum(topo: Topology, coeff: Array,
+                     edge_mask: Optional[Array] = None) -> Array:
+    """``Σ_i a_ji · coeff_i`` per row j — the self-correction weight.
+    ``edge_mask`` drops links exactly as in ``weighted_neighbor_sum``
+    (the two MUST see the same mask or Eq. 3's self term desyncs from
+    the neighbor sum)."""
     if topo.kind == "dense":
-        return (topo.adj * coeff[None, :]).sum(axis=1)
+        adj = topo.adj if edge_mask is None else topo.adj * edge_mask
+        return (adj * coeff[None, :]).sum(axis=1)
     if topo.kind == "circulant":
         acc = coeff
-        for d in _circulant_shifts(topo):
-            acc = acc + jnp.roll(coeff, -d)
+        for k, d in enumerate(_circulant_shifts(topo)):
+            term = jnp.roll(coeff, -d)
+            if edge_mask is not None:
+                term = term * edge_mask[k]
+            acc = acc + term
         return acc
-    return (topo.neighbor_mask
-            * jnp.take(coeff, topo.neighbor_idx)).sum(axis=1)
+    mask = topo.neighbor_mask
+    if edge_mask is not None:
+        mask = mask * edge_mask
+    return (mask * jnp.take(coeff, topo.neighbor_idx)).sum(axis=1)

@@ -31,6 +31,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import channel as comm_channel
 from repro.configs.base import ModelConfig
 from repro.core import es_utils, topology_repr
 from repro.core.netes import NetESConfig
@@ -102,7 +103,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                             mixing: str = "seed_replay",
                             microbatch: int = 4,
                             topology: Optional[Topology] = None,
-                            schedule=None) -> Callable:
+                            schedule=None, channel=None) -> Callable:
     """Returns step(params, adj, batch, key) -> (params', metrics).
 
     params: pytree with leading agent axis N on every leaf.
@@ -138,6 +139,17 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         ε (wire format = N scalar rewards, as in Salimans et al.), at the
         cost of N× RNG FLOPs and a scan-carry buffer. See EXPERIMENTS.md
         §Perf for the measured trade.
+
+    ``channel`` (optional): a ``comm.channel.Channel`` (DESIGN.md §11).
+    The θ payload every agent transmits passes through the channel's
+    pipeline (one *message* = one agent's whole param tree: the event
+    trigger fires per agent across all leaves, at the LAPG cost of a
+    params-sized last-sent reference in the state); dropped links mask
+    every contraction — including the seed-replay ε-scan, since a lost
+    message loses the reward scalar that keys the replay. The step
+    gains a trailing ``chan_state`` argument and returns the advanced
+    state: ``step(params, adj, batch, key[, sched_state], chan_state)
+    -> (params', metrics[, sched_state'], chan_state')``.
     """
     sigma, alpha = ncfg.sigma, ncfg.alpha
     spmd = (agent_axis_names if len(agent_axis_names) > 1
@@ -167,7 +179,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         r_neg = -eval_loss(pert_neg, abatch)
         return r_pos, r_neg
 
-    def _step(params, adj, batch, key, topo_in):
+    def _step(params, adj, batch, key, topo_in, cstate=None):
         k_agents, k_beta = jax.random.split(key)
         akeys = _agent_keys(k_agents, n_agents)
         r_pos, r_neg = jax.vmap(reward_one, spmd_axis_name=spmd)(
@@ -181,14 +193,27 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                 else (topology if topology is not None
                       else topology_repr.as_topology(adj)))
 
+        # lossy channel (DESIGN.md §11): encode the transmitted θ tree
+        # (per-agent messages), draw this step's live-link mask
+        edge_mask, cinfo = None, None
+        wire_params = params
+        if channel is not None:
+            wire_params, edge_mask, cstate, cinfo = channel.apply(
+                cstate, topo, params)
+        wire_leaves = jax.tree.leaves(wire_params)
+
         def eps_col(src):
             """Per-source ε-mix weight column a_:,src · s_eps[src] — one
             O(N + K) representation-dispatched slice per ε-scan step (no
-            dense adjacency is ever materialized)."""
-            return topology_repr.neighbor_column(topo, src) * s_eps[src]
+            dense adjacency is ever materialized). A dropped link also
+            drops the reward scalar keying the seed replay, so the same
+            edge mask applies here."""
+            return topology_repr.neighbor_column(
+                topo, src, edge_mask=edge_mask) * s_eps[src]
 
         srcs = jnp.arange(n_agents)
-        wt_sum = topology_repr.weighted_row_sum(topo, s_theta)   # (N,)
+        wt_sum = topology_repr.weighted_row_sum(topo, s_theta,
+                                                edge_mask=edge_mask)
         scale = alpha / (n_agents * sigma ** 2)
 
         # broadcast candidate: argmax over BOTH ±ε halves (same fix as
@@ -205,20 +230,26 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         leaves, treedef = jax.tree.flatten(params)
         new_leaves = []
         for i, leaf in enumerate(leaves):
+            wleaf = wire_leaves[i]      # what the neighbors actually got
             if mixing == "gather":
                 # ε regenerated per agent (sharded with θ — zero bytes at
                 # generation); θ and ε enter the representation-dispatched
                 # contraction: dense → ONE all-gather over the agent axes
                 # each + local matmul; sparse/circulant → the cheaper
-                # backends of topology_repr.weighted_neighbor_sum.
+                # backends of topology_repr.weighted_neighbor_sum. In
+                # gather mode ε moves over the wire too, so the payload
+                # codec applies to it (edge drops mask both terms).
                 lkeys = jax.vmap(lambda ak, lidx=i:
                                  jax.random.fold_in(ak, lidx))(akeys)
                 eps = jax.vmap(lambda k, sh=leaf.shape[1:], dt=leaf.dtype:
                                jax.random.normal(k, sh, dt))(lkeys)
+                eps_wire = (eps if channel is None
+                            else channel.codec(eps, batched=True))
                 mixed = (topology_repr.weighted_neighbor_sum(
-                             topo, s_theta, leaf)
+                             topo, s_theta, wleaf, edge_mask=edge_mask)
                          + sigma * topology_repr.weighted_neighbor_sum(
-                             topo, s_eps, eps))
+                             topo, s_eps, eps_wire,
+                             edge_mask=edge_mask))
                 best_pert = (jnp.einsum("i,i...->...",
                                         onehot_dt.astype(leaf.dtype), leaf)
                              + best_sign.astype(leaf.dtype) * sigma
@@ -231,7 +262,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                 # traffic); ε is regenerated locally per neighbor inside a
                 # scan — zero ε collective bytes.
                 mixed_theta = topology_repr.weighted_neighbor_sum(
-                    topo, s_theta, leaf)
+                    topo, s_theta, wleaf, edge_mask=edge_mask)
 
                 def eps_body(carry, inp, sh=leaf.shape[1:], dt=leaf.dtype,
                              lidx=i):
@@ -261,12 +292,14 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                 r_dim = leaf.shape[1]
                 rest = leaf.shape[2:]
 
-                def r_body(_, r_idx, lf=leaf, dt=leaf.dtype, sh=leaf.shape[2:],
-                           lidx=i):
+                def r_body(_, r_idx, lf=leaf, wl=wleaf, dt=leaf.dtype,
+                           sh=leaf.shape[2:], lidx=i):
                     leaf_r = jax.lax.dynamic_index_in_dim(
                         lf, r_idx, axis=1, keepdims=False)   # (N, rest)
+                    wire_r = jax.lax.dynamic_index_in_dim(
+                        wl, r_idx, axis=1, keepdims=False)
                     mixed_theta = topology_repr.weighted_neighbor_sum(
-                        topo, s_theta, leaf_r)
+                        topo, s_theta, wire_r, edge_mask=edge_mask)
 
                     def eps_body(carry, inp):
                         mix_acc, best_acc = carry
@@ -301,7 +334,10 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                               * leaf)
             update = update - ncfg.weight_decay * leaf
             new = leaf + update
-            # broadcast event: everyone adopts the best agent's perturbation
+            # broadcast event: everyone adopts the best agent's
+            # perturbation — as received over the lossy wire
+            if channel is not None:
+                best_pert = channel.codec(best_pert, batched=False)
             new = jnp.where(do_bcast,
                             jnp.broadcast_to(best_pert, new.shape), new)
             new_leaves.append(new)
@@ -313,7 +349,23 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
             "loss_mean": -raw.mean(),
             "broadcast": do_bcast.astype(jnp.float32),
         }
+        if channel is not None:
+            bcast_msgs = do_bcast.astype(jnp.float32) * n_agents
+            metrics["msgs"] = cinfo["msgs"] + bcast_msgs
+            metrics["trigger_frac"] = cinfo["trigger_frac"]
+            cstate = cstate._replace(msgs=cstate.msgs + bcast_msgs)
+            return new_params, metrics, cstate
         return new_params, metrics
+
+    if schedule is not None and channel is not None:
+        def sched_chan_step(params, adj, batch, key, sched_state,
+                            chan_state):
+            new_params, metrics, chan_state = _step(
+                params, adj, batch, key, sched_state.topo, chan_state)
+            return (new_params, metrics, schedule.advance(sched_state),
+                    chan_state)
+
+        return sched_chan_step
 
     if schedule is not None:
         def sched_step(params, adj, batch, key, sched_state):
@@ -322,6 +374,12 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
             return new_params, metrics, schedule.advance(sched_state)
 
         return sched_step
+
+    if channel is not None:
+        def chan_step(params, adj, batch, key, chan_state):
+            return _step(params, adj, batch, key, None, chan_state)
+
+        return chan_step
 
     def step(params, adj, batch, key):
         return _step(params, adj, batch, key, None)
@@ -336,7 +394,7 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
 def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                               n_pop: int,
                               topology: Optional[Topology] = None,
-                              schedule=None) -> Callable:
+                              schedule=None, channel=None) -> Callable:
     """Returns step(params, adj, batch, key) -> (params', metrics).
 
     params: ONE shared tree (no agent axis). batch leaves:
@@ -348,11 +406,25 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
     takes/returns the schedule state — ``step(params, adj, batch, key,
     sched_state) -> (params', metrics, sched_state')`` — reading the
     live degrees from ``sched_state.topo.deg`` and advancing on device.
+
+    ``channel`` (DESIGN.md §11): edge dropout scales the live degree
+    weights (a down link removes its contribution this step), and the
+    payload codec degrades the broadcast-best perturbation — the one
+    real wire payload in this time-multiplexed mode, and therefore the
+    only thing the realized-traffic counter counts. ``event_triggered``
+    stages are rejected: consensus mode has no per-agent transmitted
+    payload to hold a last-sent reference against (DESIGN.md §7.4
+    records what the mode preserves/sacrifices).
     """
     sigma, alpha = ncfg.sigma, ncfg.alpha
     topo_deg = None if topology is None else topology.deg
+    if channel is not None and channel.event_stage is not None:
+        raise ValueError(
+            "event_triggered channels need per-agent transmitted "
+            "payloads; consensus mode time-multiplexes one shared θ — "
+            "use replica mode or drop the event stage")
 
-    def _step(params, adj, batch, key, deg_in):
+    def _step(params, adj, batch, key, deg_in, topo_in=None, cstate=None):
         k_agents, k_beta = jax.random.split(key)
         akeys = _agent_keys(k_agents, n_pop)
 
@@ -369,7 +441,26 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         raw = jnp.concatenate([r_pos, r_neg])
         shaped = es_utils.centered_rank(raw)
         w_eps = shaped[:n_pop] - shaped[n_pop:]          # (P,)
-        if deg_in is not None:
+        edge_mask = None
+        if channel is not None:
+            topo_c = (topo_in if topo_in is not None
+                      else (topology if topology is not None
+                            else topology_repr.as_topology(adj)))
+            ck = cstate.key
+            if channel.dropout_stage is not None:
+                ck, sub = jax.random.split(ck)
+                edge_mask = comm_channel.dropout_mask(
+                    sub, topo_c, channel.dropout_stage.p)
+            # no per-edge θ traffic exists in this mode (the population
+            # is time-multiplexed on one tree) — realized messages count
+            # ONLY the broadcast fan-out below
+            cstate = cstate._replace(key=ck)
+        if edge_mask is not None:
+            # a down link removes its degree contribution this step
+            degree = topology_repr.weighted_row_sum(
+                topo_c, jnp.ones((n_pop,), jnp.float32),
+                edge_mask=edge_mask) / n_pop
+        elif deg_in is not None:
             degree = deg_in / n_pop                      # scheduled degrees
         else:
             degree = (adj.sum(axis=0) if topo_deg is None
@@ -406,6 +497,10 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
         best_pert = jax.tree.map(
             lambda t, p: jnp.where(best_sign > 0, p, 2.0 * t - p),
             params, best_pos)
+        if channel is not None:
+            # the broadcast payload is the one real wire transfer in
+            # this mode — the population adopts what the codec delivered
+            best_pert = channel.codec(best_pert, batched=False)
         new_params = jax.tree.map(
             lambda n, bp: jnp.where(do_bcast, bp, n),
             new_params, best_pert)
@@ -416,7 +511,24 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
             "loss_mean": -raw.mean(),
             "broadcast": do_bcast.astype(jnp.float32),
         }
+        if channel is not None:
+            bcast_msgs = do_bcast.astype(jnp.float32) * n_pop
+            metrics["msgs"] = bcast_msgs
+            metrics["trigger_frac"] = jnp.ones((), jnp.float32)
+            cstate = cstate._replace(msgs=cstate.msgs + bcast_msgs)
+            return new_params, metrics, cstate
         return new_params, metrics
+
+    if schedule is not None and channel is not None:
+        def sched_chan_step(params, adj, batch, key, sched_state,
+                            chan_state):
+            new_params, metrics, chan_state = _step(
+                params, adj, batch, key, sched_state.topo.deg,
+                sched_state.topo, chan_state)
+            return (new_params, metrics, schedule.advance(sched_state),
+                    chan_state)
+
+        return sched_chan_step
 
     if schedule is not None:
         def sched_step(params, adj, batch, key, sched_state):
@@ -425,6 +537,12 @@ def make_consensus_train_step(cfg: ModelConfig, ncfg: NetESConfig,
             return new_params, metrics, schedule.advance(sched_state)
 
         return sched_step
+
+    if channel is not None:
+        def chan_step(params, adj, batch, key, chan_state):
+            return _step(params, adj, batch, key, None, None, chan_state)
+
+        return chan_step
 
     def step(params, adj, batch, key):
         return _step(params, adj, batch, key, None)

@@ -25,12 +25,29 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.topology_repr import Topology, signed_offsets  # noqa: F401
 # signed_offsets moved to core.topology_repr (the circulant representation
 # owns its offset algebra); re-exported here for existing importers.
+
+
+def _wire_codec(channel):
+    """Resolve a ``comm.channel.Channel`` into the per-shard payload
+    encoder applied BEFORE the collective (DESIGN.md §11): each chip
+    compresses its local θ rows once and every hop moves the narrow
+    payload. Only stateless compression belongs at this layer — the
+    collective schedule is static, so stateful stages (event triggers,
+    edge dropout) live in the step builders, not the wire."""
+    if channel is None or channel.lossless:
+        return lambda x: x
+    if channel.event_stage is not None or channel.dropout_stage is not None:
+        raise ValueError(
+            "collective-layer channels carry only stateless payload "
+            "codecs (quantize/topk); event_triggered and dropout stages "
+            "thread through the train-step builders instead")
+    return lambda x: channel.codec(x, batched=True)
 
 
 def circulant_mixing_ref(weights: jax.Array, thetas: jax.Array,
@@ -49,18 +66,25 @@ def circulant_mixing_ref(weights: jax.Array, thetas: jax.Array,
     return acc
 
 
-def make_permute_mixing(mesh: Mesh, axis: str, offsets: Sequence[int]):
+def make_permute_mixing(mesh: Mesh, axis: str, offsets: Sequence[int],
+                        channel=None):
     """Returns mix(weights (N,N), thetas (N,D)) -> (N,D), sharded over
     ``axis`` with agent-dim placement, moving p·N·D bytes via a ppermute
-    chain instead of an N·D all-gather."""
+    chain instead of an N·D all-gather. ``channel`` (DESIGN.md §11)
+    encodes each chip's θ shard ONCE before it enters the ring — a
+    quantize(bits=8) channel moves p·N·D BYTES instead of p·N·D floats.
+    The self term also reads the encoded value, matching the core
+    engine (and the all-gather backends), where every consumer of the
+    payload — agent j included — sees the wire encoding."""
     n = mesh.shape[axis]
     shifts = signed_offsets(offsets, n)
+    encode = _wire_codec(channel)
 
     def local_mix(weights, theta):
         # theta: (1, D) local shard; weights: (N, N) replicated
         j = jax.lax.axis_index(axis)
-        acc = weights[j, j] * theta
-        recv = theta
+        recv = encode(theta)
+        acc = weights[j, j] * recv
         prev_shift = 0
         for d in shifts:
             # rotate the RING by (d − prev): chip j receives chip (j+d)'s θ
@@ -84,14 +108,19 @@ def make_permute_mixing(mesh: Mesh, axis: str, offsets: Sequence[int]):
 # formats. mix(weights (N, N), thetas (N, D)) -> (N, D), agent-sharded.
 # ---------------------------------------------------------------------------
 
-def make_allgather_mixing(mesh: Mesh, axis: str):
+def make_allgather_mixing(mesh: Mesh, axis: str, channel=None):
     """Dense backend: one tiled all-gather of θ (N·D bytes) + local
     row-contraction — what the einsum in ``netes_dist`` lowers to, made
-    explicit so the dispatch has a uniform shard_map shape."""
+    explicit so the dispatch has a uniform shard_map shape. ``channel``
+    encodes the shard before the gather; the local row j is re-read from
+    the gathered buffer, so every chip (including j itself) contracts
+    the SAME wire values — receivers never diverge."""
+    encode = _wire_codec(channel)
 
     def local_mix(weights, theta):
         j = jax.lax.axis_index(axis)
-        full = jax.lax.all_gather(theta, axis, axis=0, tiled=True)  # (N, D)
+        full = jax.lax.all_gather(encode(theta), axis, axis=0,
+                                  tiled=True)                   # (N, D)
         return (weights[j] @ full)[None]
 
     return shard_map(local_mix, mesh=mesh,
@@ -99,7 +128,8 @@ def make_allgather_mixing(mesh: Mesh, axis: str):
                      out_specs=P(axis, None))
 
 
-def make_sparse_gather_mixing(mesh: Mesh, axis: str, topo: Topology):
+def make_sparse_gather_mixing(mesh: Mesh, axis: str, topo: Topology,
+                              channel=None):
     """Sparse backend: all-gather θ, then contract ONLY the K_max listed
     neighbors — O(K·D) local flops instead of O(N·D).
 
@@ -108,13 +138,16 @@ def make_sparse_gather_mixing(mesh: Mesh, axis: str, topo: Topology):
     is the local compute + the O(N·K) weight footprint. A
     neighborhood-routed exchange (per-edge ppermutes batched by offset)
     is the circulant case below; generalizing it to arbitrary sparse
-    graphs is future work recorded in DESIGN.md §3.
+    graphs is future work recorded in DESIGN.md §3. ``channel`` encodes
+    the shard before the gather (quantized neighbor fetches).
     """
     idx, mask = topo.neighbor_idx, topo.neighbor_mask
+    encode = _wire_codec(channel)
 
     def local_mix(weights, theta):
         j = jax.lax.axis_index(axis)
-        full = jax.lax.all_gather(theta, axis, axis=0, tiled=True)  # (N, D)
+        full = jax.lax.all_gather(encode(theta), axis, axis=0,
+                                  tiled=True)                   # (N, D)
         cols = idx[j]                                   # (K,)
         # ``weights`` is the full mixing matrix (adj ⊙ R̃) — the edge
         # weight is already in it, so only the PADDING indicator of
@@ -129,16 +162,19 @@ def make_sparse_gather_mixing(mesh: Mesh, axis: str, topo: Topology):
                      out_specs=P(axis, None))
 
 
-def make_topology_mixing(mesh: Mesh, axis: str, topo: Topology):
+def make_topology_mixing(mesh: Mesh, axis: str, topo: Topology,
+                         channel=None):
     """Pick the distributed mixing backend from the topology's physical
     representation. The circulant ppermute chain (p·N·D bytes) is one case
     of the same dispatch; dense and sparse share the all-gather wire
-    format and differ in local contraction cost."""
+    format and differ in local contraction cost. ``channel`` applies the
+    same wire codec to whichever backend wins (DESIGN.md §11)."""
     if topo.kind == "circulant":
-        return make_permute_mixing(mesh, axis, topo.offsets)
+        return make_permute_mixing(mesh, axis, topo.offsets,
+                                   channel=channel)
     if topo.kind == "sparse":
-        return make_sparse_gather_mixing(mesh, axis, topo)
-    return make_allgather_mixing(mesh, axis)
+        return make_sparse_gather_mixing(mesh, axis, topo, channel=channel)
+    return make_allgather_mixing(mesh, axis, channel=channel)
 
 
 # ---------------------------------------------------------------------------
@@ -146,7 +182,8 @@ def make_topology_mixing(mesh: Mesh, axis: str, topo: Topology):
 # ---------------------------------------------------------------------------
 
 def make_rotating_permute_mixing(mesh: Mesh, axis: str,
-                                 offsets: Sequence[int], stride: int):
+                                 offsets: Sequence[int], stride: int,
+                                 channel=None):
     """Rotating-circulant backend: ``mix(weights, thetas, t) -> (N, D)``.
 
     The ``rotate_circulant`` schedule maps offset d to
@@ -165,12 +202,13 @@ def make_rotating_permute_mixing(mesh: Mesh, axis: str,
     if offsets and max(offsets) > m:
         raise ValueError(f"rotating offsets must lie in [1, {m}] (n={n})")
     cycle = m // math.gcd(stride % m or m, m)
+    encode = _wire_codec(channel)
 
     def chain(offs):
         def local_chain(weights, theta):
             j = jax.lax.axis_index(axis)
-            acc = weights[j, j] * theta
-            recv = theta
+            recv = encode(theta)
+            acc = weights[j, j] * recv
             prev_shift = 0
             for d in signed_offsets(offs, n):
                 step = (d - prev_shift) % n

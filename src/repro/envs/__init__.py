@@ -7,10 +7,10 @@ import functools
 
 import jax
 
+from .acrobot import Acrobot
+from .cartpole import CartPoleSwingUp
 from .landscapes import LANDSCAPES, make_landscape_reward_fn
 from .pendulum import Pendulum
-from .cartpole import CartPoleSwingUp
-from .acrobot import Acrobot
 from .policy import MLPPolicy
 from .rollout import make_env_reward_fn
 

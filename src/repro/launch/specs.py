@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.comm import channel as comm_channel
+from repro.comm.channel import ChannelSpec
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import ModelConfig
 from repro.core import topology_repr, topology_sched
@@ -57,6 +59,13 @@ class PairSpec:
     gains a trailing ``sched`` argument (the scan-compatible
     ``ScheduleState``) and returns the advanced state — the lowered HLO
     contains the ON-DEVICE graph update (DESIGN.md §9).
+
+    ``chan`` is the serializable ChannelSpec for lossy agent links
+    (DESIGN.md §11): ``build_step`` compiles it into a
+    ``comm.channel.Channel``, the step gains a trailing ``chan``
+    argument (the scan-compatible ``ChannelState``) and returns the
+    advanced state — encode/trigger/edge-drop run inside the lowered
+    HLO.
     """
     arch: str
     shape_name: str
@@ -66,11 +75,13 @@ class PairSpec:
     n_agents: int
     topo: Optional[TopologySpec] = None
     sched: Optional[ScheduleSpec] = None
+    chan: Optional[ChannelSpec] = None
 
 
 def classify(arch: str, shape_name: str, mesh: Mesh,
              topo_spec: Optional[TopologySpec] = None,
-             sched_spec: Optional[ScheduleSpec] = None) -> PairSpec:
+             sched_spec: Optional[ScheduleSpec] = None,
+             chan_spec: Optional[ChannelSpec] = None) -> PairSpec:
     if sched_spec is not None and topo_spec is None:
         raise ValueError("a topology schedule needs a TopologySpec to "
                          "schedule (pass topo_spec)")
@@ -97,9 +108,13 @@ def classify(arch: str, shape_name: str, mesh: Mesh,
         if sched_spec is not None:
             raise ValueError(f"topology schedules only apply to train "
                              f"shapes, not {kind!r}")
+        if chan_spec is not None:
+            raise ValueError(f"agent-link channels only apply to train "
+                             f"shapes, not {kind!r}")
         mode, n = "serve", 0
     return PairSpec(arch=arch, shape_name=shape_name, mode=mode, kind=kind,
-                    cfg=cfg, n_agents=n, topo=topo, sched=sched_spec)
+                    cfg=cfg, n_agents=n, topo=topo, sched=sched_spec,
+                    chan=chan_spec)
 
 
 # ---------------------------------------------------------------------------
@@ -162,12 +177,13 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
 def input_specs(arch: str, shape_name: str, mesh: Mesh,
                 dtype=PARAM_DTYPE,
                 topo_spec: Optional[TopologySpec] = None,
-                sched_spec: Optional[ScheduleSpec] = None) -> Dict[str, Any]:
+                sched_spec: Optional[ScheduleSpec] = None,
+                chan_spec: Optional[ChannelSpec] = None) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every input of the lowered step
-    (params, adjacency, batch/cache, rng key, schedule state), plus their
-    PartitionSpecs."""
+    (params, adjacency, batch/cache, rng key, schedule/channel state),
+    plus their PartitionSpecs."""
     pair = classify(arch, shape_name, mesh, topo_spec=topo_spec,
-                    sched_spec=sched_spec)
+                    sched_spec=sched_spec, chan_spec=chan_spec)
     cfg = pair.cfg
     shape = INPUT_SHAPES[shape_name]
     seq, gbatch = shape["seq_len"], shape["global_batch"]
@@ -201,6 +217,18 @@ def input_specs(arch: str, shape_name: str, mesh: Mesh,
             args["sched"] = jax.tree.map(
                 lambda l: SDS(tuple(l.shape), l.dtype), state)
             specs["sched"] = jax.tree.map(lambda _: P(), args["sched"])
+        if pair.chan is not None:
+            # channel state (DESIGN.md §11): init is pure jnp, so
+            # eval_shape gives the abstract tree. The event reference
+            # (when present) mirrors the params tree and shards with it;
+            # the threefry key and counters replicate.
+            channel = comm_channel.compile_channel(pair.chan,
+                                                   pair.n_agents)
+            args["chan"] = jax.eval_shape(channel.init, params_abs)
+            last_spec = (specs["params"]
+                         if channel.event_stage is not None else ())
+            specs["chan"] = comm_channel.ChannelState(
+                key=P(), last_sent=last_spec, msgs=P())
     elif pair.kind == "prefill":
         batch_abs = _serve_batch_specs(cfg, seq, gbatch, dtype)
         args = {"params": params_abs, "batch": batch_abs}
@@ -254,20 +282,25 @@ def build_step(pair: PairSpec, mesh: Mesh,
     if pair.kind == "train":
         schedule = (_compile_pair_schedule(pair)
                     if pair.sched is not None else None)
+        channel = (comm_channel.compile_channel(pair.chan, pair.n_agents)
+                   if pair.chan is not None else None)
         topo = (topology_repr.from_spec(pair.topo)
                 if pair.topo is not None and schedule is None else None)
         if pair.mode == "replica":
             step = netes_dist.make_replica_train_step(
                 cfg, ncfg, pair.n_agents, sharding.agent_axes(mesh),
-                topology=topo, schedule=schedule)
+                topology=topo, schedule=schedule, channel=channel)
         else:
             step = netes_dist.make_consensus_train_step(cfg, ncfg,
                                                         pair.n_agents,
                                                         topology=topo,
-                                                        schedule=schedule)
+                                                        schedule=schedule,
+                                                        channel=channel)
         order = ("params", "adj", "batch", "key")
         if schedule is not None:
             order = order + ("sched",)
+        if channel is not None:
+            order = order + ("chan",)
         return step, order
     if pair.kind == "prefill":
         return netes_dist.make_prefill_step(cfg), ("params", "batch")
@@ -285,10 +318,11 @@ def named_shardings(mesh: Mesh, spec_tree: Any) -> Any:
 def lower_pair(arch: str, shape_name: str, mesh: Mesh,
                ncfg: Optional[NetESConfig] = None, dtype=PARAM_DTYPE,
                topo_spec: Optional[TopologySpec] = None,
-               sched_spec: Optional[ScheduleSpec] = None):
+               sched_spec: Optional[ScheduleSpec] = None,
+               chan_spec: Optional[ChannelSpec] = None):
     """Lower one (arch × shape × mesh). Returns (lowered, pair)."""
     info = input_specs(arch, shape_name, mesh, dtype, topo_spec=topo_spec,
-                       sched_spec=sched_spec)
+                       sched_spec=sched_spec, chan_spec=chan_spec)
     pair = info["pair"]
     fn, order = build_step(pair, mesh, ncfg)
     args = [info["args"][k] for k in order]

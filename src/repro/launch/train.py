@@ -38,6 +38,11 @@ def main() -> None:
                     help="time-varying topology, e.g. 'resample_er("
                          "period=8)' or 'rotate_circulant(stride=1)' "
                          "(DESIGN.md §9)")
+    ap.add_argument("--channel", default=None,
+                    help="lossy agent-link channel pipeline, e.g. "
+                         "'quantize(bits=8)' or 'event_triggered("
+                         "threshold=0.01)|quantize(bits=4)|dropout("
+                         "p=0.1,seed=0)' (DESIGN.md §11)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="save train state at every eval point and "
                          "resume from it if present (rl only)")
@@ -67,6 +72,11 @@ def main() -> None:
     ap.add_argument("--search-schedules", default=None,
                     help="comma-separated schedule candidates, e.g. "
                          "'static,resample_er(period=8)'")
+    ap.add_argument("--search-channels", default=None,
+                    help="semicolon-separated channel candidates, e.g. "
+                         "'lossless;quantize(bits=8);quantize(bits=4)' "
+                         "(';' because stages compose with '|') — the "
+                         "tournament co-optimizes graph × compression")
     ap.add_argument("--search-checkpoint-dir", default=None,
                     help="save tournament rounds; a rerun resumes after "
                          "the last completed round")
@@ -97,6 +107,10 @@ def main() -> None:
             ap.error("--schedule conflicts with --search (training uses "
                      "the WINNER's schedule); add scheduled candidates "
                      "via --search-schedules instead")
+        if args.channel is not None:
+            ap.error("--channel conflicts with --search (training uses "
+                     "the WINNER's channel); add channel candidates "
+                     "via --search-channels instead")
         from repro.search import SearchConfig, run_search
         sconf = SearchConfig(
             n_agents=args.agents,
@@ -106,6 +120,8 @@ def main() -> None:
             seeds=tuple(int(s) for s in args.search_seeds.split(",")),
             schedules=(tuple(args.search_schedules.split(","))
                        if args.search_schedules else (None,)),
+            channels=(tuple(args.search_channels.split(";"))
+                      if args.search_channels else (None,)),
             pool_size=args.search_pool,
             round_iters=args.search_iters,
             eval_episodes=args.search_eval_episodes,
@@ -132,6 +148,7 @@ def main() -> None:
                                   p=args.density, seed=args.topo_seed),
             representation=args.representation,
             schedule=args.schedule,
+            channel=args.channel,
             checkpoint_dir=args.checkpoint_dir,
             seed=args.seed,
             netes=netes_cfg)

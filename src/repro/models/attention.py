@@ -207,6 +207,53 @@ def attention_block(params, spec: AttnSpec, x: jax.Array,
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
 
 
+def prefill_attention(params, spec: AttnSpec, x: jax.Array,
+                      positions: jax.Array, cache: dict
+                      ) -> tuple[jax.Array, dict]:
+    """Full-sequence causal self-attention that ALSO writes the decode
+    KV cache — exactly the slots S teacher-forced ``decode_attention``
+    steps would have filled (slot = pos % L; of positions sharing a slot
+    only the latest survives, so only the last L prompt positions are
+    written). One O(S) forward replaces O(S) jitted decode calls; parity
+    is tested in tests/test_serve_prefill.py.
+
+    For windowed patterns the attention mask bounds the lookback, so a
+    prompt longer than the L-slot ring still matches decode; FULL
+    attention over a ring smaller than the prompt cannot (decode could
+    only see the last L keys) — rejected rather than silently diverging
+    (ServeEngine always sizes the cache ≥ prompt + new tokens)."""
+    b, s, _ = x.shape
+    if spec.kind == "full" and s > cache["k"].shape[1]:
+        raise ValueError(
+            f"prefill of a {s}-token prompt into a {cache['k'].shape[1]}"
+            "-slot full-attention cache is not decode-equivalent; size "
+            "the cache to at least the prompt length")
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    k, v = jax.lax.optimization_barrier((k, v))
+    k = maybe_constrain(k, "kv_full")
+    v = maybe_constrain(v, "kv_full")
+    if spec.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q)
+        k = layers.rmsnorm(params["k_norm"], k)
+    if spec.rope:
+        q = layers.apply_rope(q, positions, spec.rope_theta)
+        k = layers.apply_rope(k, positions, spec.rope_theta)
+    out = blockwise_attention(spec, q, k, v, positions, positions,
+                              causal=True)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+    length = cache["k"].shape[1]
+    start = max(0, s - length)
+    slots = jnp.arange(start, s) % length
+    ck = cache["k"].at[:, slots].set(
+        k[:, start:s].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(
+        v[:, start:s].astype(cache["v"].dtype))
+    return y, {"k": ck, "v": cv}
+
+
 # ---------------------------------------------------------------------------
 # decode (single token against a cache)
 # ---------------------------------------------------------------------------

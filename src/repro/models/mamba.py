@@ -146,6 +146,31 @@ def mamba_block(params, spec: MambaSpec, x: jax.Array,
     return y @ params["out_proj"]
 
 
+def mamba_prefill(params, spec: MambaSpec, x: jax.Array, cache: dict):
+    """Full-sequence block that ALSO returns the decode cache — the
+    final SSM state and conv ring exactly as S teacher-forced
+    ``mamba_decode`` steps would have left them (the ring holds the
+    last ``d_conv − 1`` pre-conv inputs, zero-padded for short
+    prompts). Serve prompts fit one chunk, so the direct associative
+    scan suffices (``mamba_block``'s chunked path is a train/long-
+    prefill concern)."""
+    b, s, _ = x.shape
+    xin, z = _ssm_inputs(params, spec, x)                  # (B,S,di)
+    xc = _causal_conv(params, spec, xin)
+    decay, drive, c = _selective_terms(params, spec, xc)
+    h = mamba_scan_ref(decay, drive)                       # (B,S,di,ds)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c)
+    y = y + params["D"][None, None] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+
+    k = spec.d_conv - 1
+    buf = jnp.concatenate(
+        [jnp.zeros((b, k, spec.d_inner), cache["conv"].dtype),
+         xin.astype(cache["conv"].dtype)], axis=1)[:, s:s + k]
+    return out, {"h": h[:, -1], "conv": buf}
+
+
 def init_mamba_cache(batch: int, spec: MambaSpec, dtype):
     return {
         "h": jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),

@@ -193,6 +193,32 @@ def rwkv6_block(params, spec: RWKV6Spec, x: jax.Array,
     return (out * g) @ params["wo"]
 
 
+def rwkv6_prefill(params, spec: RWKV6Spec, x: jax.Array, cache: dict,
+                  chunk: int = 128):
+    """Full-sequence time-mix block that ALSO returns the decode cache —
+    the final WKV state and last block input exactly as S teacher-forced
+    ``rwkv6_decode`` steps would have left them (the initial
+    ``cache['x_prev']``/``cache['s']`` seed the shift and recurrence, so
+    a zero-initialized cache matches ``rwkv6_block`` bit-for-bit)."""
+    b, s, d = x.shape
+    h, n = spec.num_heads, spec.head_dim
+    xp = _time_shift(x, cache["x_prev"])
+    xr, xk, xv, xw, xg = _mix_inputs(params, x, xp)
+    r = (xr @ params["wr"]).reshape(b, s, h, n)
+    k = (xk @ params["wk"]).reshape(b, s, h, n)
+    v = (xv @ params["wv"]).reshape(b, s, h, n)
+    g = jax.nn.silu(xg @ params["wg"])
+    decay = params["decay_base"] + _lora(params["decay_lora"], xw)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, s, h, n)
+    out, s_fin = wkv6_chunked(r, k, v, w, params["bonus_u"],
+                              s0=cache["s"], chunk=chunk)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    out = layers.layernorm(params["ln_x"], out)
+    y = (out * g) @ params["wo"]
+    return y, {"s": s_fin, "x_prev": x[:, -1:].astype(
+        cache["x_prev"].dtype)}
+
+
 def init_rwkv_cache(batch: int, spec: RWKV6Spec, dtype):
     return {
         "s": jnp.zeros((batch, spec.num_heads, spec.head_dim, spec.head_dim),

@@ -452,6 +452,97 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Dict,
     return logits, new_cache
 
 
+def _prefill_layer(p, cfg: ModelConfig, ls: LayerSpec, x, c, positions,
+                   enc_out, enc_pos):
+    """``_layer_forward`` that also fills the layer's decode cache from
+    the full-sequence computation (attention KV slots, mamba SSM/conv
+    state, rwkv WKV state and token shifts)."""
+    cnew = dict(c)
+    h = _norm(cfg, p["norm1"], x)
+    if ls.mixer.startswith("attn"):
+        mix, cnew["kv"] = attention.prefill_attention(
+            p["attn"], attn_spec(cfg, ls), h, positions, c["kv"])
+    elif ls.mixer == "mamba":
+        mix, cnew["mamba"] = mamba.mamba_prefill(
+            p["mamba"], mamba_spec(cfg), h, c["mamba"])
+    elif ls.mixer == "rwkv":
+        mix, cnew["rwkv"] = rwkv6.rwkv6_prefill(
+            p["rwkv"], rwkv_spec(cfg), h, c["rwkv"])
+    else:
+        raise ValueError(ls.mixer)
+    x = x + mix
+    if enc_out is not None:
+        hc = _norm(cfg, p["norm_cross"], x)
+        x = x + attention.attention_block(
+            p["cross"], attn_spec(cfg, LayerSpec("attn_full", "swiglu")),
+            hc, positions, kv_x=enc_out, kv_positions=enc_pos,
+            causal=False)
+    h = _norm(cfg, p["norm2"], x)
+    if ls.ffn == "swiglu":
+        f = layers.swiglu(p["ffn"], h)
+    elif ls.ffn == "gelu":
+        f = layers.gelu_mlp(p["ffn"], h)
+    elif ls.ffn == "moe":
+        f = moe.moe_block(p["moe"], moe_spec(cfg), h)
+    elif ls.ffn == "rwkv_channel":
+        f = rwkv6.rwkv6_channel(p["ffn"], h)
+        cnew["channel_x_prev"] = h[:, -1:]
+    else:
+        raise ValueError(ls.ffn)
+    return x + f, cnew
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache: Dict):
+    """Prompt prefill: ONE full-sequence forward that writes the decode
+    cache directly — replacing the O(S_prompt) teacher-forced
+    ``decode_step`` warm-up (tested equivalent in
+    tests/test_serve_prefill.py). Returns ``(last-position logits
+    (B, V), cache')`` — the logits that predict the first generated
+    token."""
+    x, positions, enc_out, enc_pos = embed_inputs(params, cfg, batch)
+    specs = cfg.layer_specs()
+    head, period, n_rep, _ = stack_plan(cfg)
+    new_cache = dict(cache)
+    if cfg.is_encoder_decoder:
+        new_cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
+    li = 0
+    new_head = []
+    for p, c in zip(params["layers_head"], cache["head"]):
+        x, cnew = _prefill_layer(p, cfg, specs[li], x, c, positions,
+                                 enc_out, enc_pos)
+        new_head.append(cnew)
+        li += 1
+    new_cache["head"] = new_head
+    if params["layers_scan"]:
+        body_specs = specs[li:li + period]
+
+        def body(xc, inp):
+            slice_params, slice_cache = inp
+            new_slices = []
+            for j in range(period):
+                xc, cnew = _prefill_layer(slice_params[j], cfg,
+                                          body_specs[j], xc,
+                                          slice_cache[j], positions,
+                                          enc_out, enc_pos)
+                new_slices.append(cnew)
+            return xc, tuple(new_slices)
+
+        x, new_scan = jax.lax.scan(
+            body, x, (tuple(params["layers_scan"]), tuple(cache["scan"])))
+        new_cache["scan"] = list(new_scan)
+        li += n_rep * period
+    new_tail = []
+    for p, c in zip(params["layers_tail"], cache["tail"]):
+        x, cnew = _prefill_layer(p, cfg, specs[li], x, c, positions,
+                                 enc_out, enc_pos)
+        new_tail.append(cnew)
+        li += 1
+    new_cache["tail"] = new_tail
+    x = _norm(cfg, params["final_norm"], x[:, -1:])
+    return unembed(params, cfg, x)[:, 0], new_cache
+
+
 def _cross_decode(p, cfg: ModelConfig, x, enc_out, enc_pos, pos):
     """Cross-attention for a single decode token (no cache mutation —
     encoder KV is static). Query positions are irrelevant here: cross

@@ -2,14 +2,15 @@
 
 A search candidate is a serializable ``CandidateSpec`` — a
 ``TopologySpec`` (family × density × graph seed) plus an optional
-``ScheduleSpec`` (time-varying topologies search too). ``make_grid``
-expands the cross product, dropping combinations the schedule compiler
-would reject (e.g. ``rotate_circulant`` over a non-circulant family);
-``seed_pool`` ranks the grid by the Lemma 7.2 theory prior
-(``core.theory.prior_score``) and keeps the top ``pool_size``, always
-retaining the requested control families (the fully-connected baseline
-must survive pruning — the tournament's win condition is *beating* it,
-DESIGN.md §10).
+``ScheduleSpec`` (time-varying topologies search too) plus an optional
+``ChannelSpec`` (DESIGN.md §11 — tournaments co-optimize the graph and
+its compression/fault regime). ``make_grid`` expands the cross product,
+dropping combinations the schedule compiler would reject (e.g.
+``rotate_circulant`` over a non-circulant family); ``seed_pool`` ranks
+the grid by the Lemma 7.2 theory prior (``core.theory.prior_score``)
+and keeps the top ``pool_size``, always retaining the requested control
+families (the fully-connected baseline must survive pruning — the
+tournament's win condition is *beating* it, DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.comm.channel import ChannelSpec
 from repro.core import theory
 from repro.core.topology import TopologySpec
 from repro.core.topology_sched import ScheduleSpec
@@ -37,10 +39,15 @@ class CandidateSpec:
 
     topo: TopologySpec
     sched: Optional[ScheduleSpec] = None
+    chan: Optional[ChannelSpec] = None
 
     @property
     def scheduled(self) -> bool:
         return self.sched is not None and self.sched.kind != "static"
+
+    @property
+    def channeled(self) -> bool:
+        return self.chan is not None and not self.chan.lossless
 
     def effective_p(self) -> float:
         """Edge density the theory prior should see (the closed forms are
@@ -65,6 +72,8 @@ class CandidateSpec:
             f"{t.family}:p={t.p:g}:s={t.seed}"
         if self.scheduled:
             s += f"+{self.sched.kind}"
+        if self.channeled:
+            s += f"+{self.chan.label()}"
         return s
 
 
@@ -84,10 +93,13 @@ def make_grid(n_agents: int,
               densities: Sequence[float],
               seeds: Sequence[int] = (0,),
               schedules: Sequence[Union[ScheduleSpec, str, None]] = (None,),
+              channels: Sequence[Union[ChannelSpec, str, None]] = (None,),
               ) -> List[CandidateSpec]:
-    """Cross product families × densities × seeds × schedules, with
-    control families collapsed to one candidate each and incompatible
-    (family, schedule) pairs dropped. Deterministic order."""
+    """Cross product families × densities × seeds × schedules ×
+    channels, with control families collapsed to one candidate each and
+    incompatible (family, schedule) pairs dropped. Deterministic order.
+    A ``lossless`` channel collapses to None (same program, one
+    candidate) — mirroring ``static`` schedules."""
     parsed: List[Optional[ScheduleSpec]] = []
     for s in schedules:
         if isinstance(s, str):
@@ -96,6 +108,14 @@ def make_grid(n_agents: int,
             s = None
         if s not in parsed:
             parsed.append(s)
+    chans: List[Optional[ChannelSpec]] = []
+    for c in channels:
+        if isinstance(c, str):
+            c = ChannelSpec.parse(c)
+        if c is not None and c.lossless:
+            c = None
+        if c not in chans:
+            chans.append(c)
     out: List[CandidateSpec] = []
     for family in families:
         if family in CONTROL_FAMILIES:
@@ -106,12 +126,14 @@ def make_grid(n_agents: int,
             for sched in parsed:
                 if not _schedule_compatible(family, sched):
                     continue
-                cand = CandidateSpec(
-                    topo=TopologySpec(family=family, n_agents=n_agents,
-                                      p=p, seed=seed),
-                    sched=sched)
-                if cand not in out:
-                    out.append(cand)
+                for chan in chans:
+                    cand = CandidateSpec(
+                        topo=TopologySpec(family=family,
+                                          n_agents=n_agents,
+                                          p=p, seed=seed),
+                        sched=sched, chan=chan)
+                    if cand not in out:
+                        out.append(cand)
     return out
 
 

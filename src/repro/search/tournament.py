@@ -49,6 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
+from repro.comm import channel as comm_channel
+from repro.comm.channel import Channel
 from repro.core import netes, topology_repr, topology_sched
 from repro.core.netes import NetESConfig
 from repro.core.topology_sched import TopologySchedule
@@ -69,6 +71,7 @@ class SearchConfig:
     densities: Tuple[float, ...] = (0.05, 0.1, 0.2, 0.33)
     seeds: Tuple[int, ...] = (0, 1)
     schedules: Tuple[Optional[str], ...] = (None,)
+    channels: Tuple[Optional[str], ...] = (None,)   # DESIGN.md §11
     pool_size: int = 12            # after theory-prior pruning
     round_iters: int = 16          # round-0 training iterations
     widen: bool = True             # double per-round budget (halving's
@@ -101,12 +104,17 @@ class SearchResult:
     def schedule(self):
         return self.winner.sched
 
+    @property
+    def channel(self):
+        return self.winner.chan
+
     def to_json(self) -> dict:
         return {
             "winner": self.winner.label(),
             "topology": dataclasses.asdict(self.topology),
             "schedule": (dataclasses.asdict(self.schedule)
                          if self.schedule else None),
+            "channel": (self.channel.label() if self.channel else None),
             "score": self.score,
             "control_scores": self.control_scores,
             "pool": [c.label() for c in self.pool],
@@ -123,14 +131,20 @@ class SearchResult:
 @dataclasses.dataclass
 class _Plan:
     """How one candidate runs: its cohort signature plus either a static
-    ``Topology`` or a compiled per-candidate ``TopologySchedule``."""
+    ``Topology`` or a compiled per-candidate ``TopologySchedule``, and
+    an optional compiled ``Channel`` (jit-static — candidates sharing a
+    channel share one vmapped program; DESIGN.md §11)."""
 
     cohort: tuple
     topo: Optional[topology_repr.Topology] = None
     schedule: Optional[TopologySchedule] = None
+    channel: Optional[Channel] = None
 
 
 def _plan_candidate(cand: CandidateSpec, representation: str) -> _Plan:
+    channel = (comm_channel.compile_channel(cand.chan,
+                                            cand.topo.n_agents)
+               if cand.channeled else None)
     if not cand.scheduled:
         adj = cand.topo.build()
         rep = representation
@@ -142,8 +156,9 @@ def _plan_candidate(cand: CandidateSpec, representation: str) -> _Plan:
             raise ValueError(
                 f"tournaments batch dense or sparse candidates, not "
                 f"{rep!r} (circulant offsets are jit-static aux)")
-        return _Plan(cohort=("static", rep),
-                     topo=topology_repr.from_dense(adj, rep))
+        return _Plan(cohort=("static", rep, channel),
+                     topo=topology_repr.from_dense(adj, rep),
+                     channel=channel)
     rep = representation
     if cand.sched.kind == "rotate_circulant":
         rep = "auto"             # compiles to traced-shift circulant
@@ -155,8 +170,8 @@ def _plan_candidate(cand: CandidateSpec, representation: str) -> _Plan:
               if schedule.spec.kind in ("anneal_density", "resample_er")
               else None)
     key = ("sched", schedule.spec, schedule.representation, schedule.n,
-           schedule.base_offsets, base_p)
-    return _Plan(cohort=key, schedule=schedule)
+           schedule.base_offsets, base_p, channel)
+    return _Plan(cohort=key, schedule=schedule, channel=channel)
 
 
 def _make_plans(pool: Sequence[CandidateSpec], representation: str
@@ -190,11 +205,24 @@ def _eval_score(state, key, reward_fn, episodes: int):
 
 
 @partial(jax.jit, static_argnames=("reward_fn", "cfg", "num_iters",
-                                   "eval_episodes"))
+                                   "eval_episodes", "channel"))
 def _round_static(states, topos, eval_keys, reward_fn, cfg,
-                  num_iters: int, eval_episodes: int):
+                  num_iters: int, eval_episodes: int, channel=None,
+                  cstates=None):
     """One round for a stacked static cohort: S fused training scans +
-    S noise-free evals, vmapped into one compiled program."""
+    S noise-free evals, vmapped into one compiled program. With a
+    (cohort-shared, jit-static) ``channel``, the per-candidate
+    ``ChannelState``s vmap alongside and come back advanced."""
+
+    if channel is not None:
+        def one_chan(state, topo, ekey, cs):
+            state, cs, _m = netes.run(state, topo, reward_fn, cfg,
+                                      num_iters, channel=channel,
+                                      chan_state=cs)
+            return state, cs, _eval_score(state, ekey, reward_fn,
+                                          eval_episodes)
+
+        return jax.vmap(one_chan)(states, topos, eval_keys, cstates)
 
     def one(state, topo, ekey):
         state, _metrics = netes.run(state, topo, reward_fn, cfg, num_iters)
@@ -204,11 +232,24 @@ def _round_static(states, topos, eval_keys, reward_fn, cfg,
 
 
 @partial(jax.jit, static_argnames=("reward_fn", "cfg", "schedule",
-                                   "num_iters", "eval_episodes"))
+                                   "num_iters", "eval_episodes",
+                                   "channel"))
 def _round_scheduled(states, sstates, eval_keys, reward_fn, cfg,
-                     schedule, num_iters: int, eval_episodes: int):
+                     schedule, num_iters: int, eval_episodes: int,
+                     channel=None, cstates=None):
     """Scheduled-cohort round: the graph evolves on device inside each
-    vmapped scan (one shared jit-static schedule for the whole cohort)."""
+    vmapped scan (one shared jit-static schedule for the whole cohort;
+    likewise the channel, when the cohort carries one)."""
+
+    if channel is not None:
+        def one_chan(state, ss, ekey, cs):
+            state, ss, cs, _m = netes.run_scheduled(
+                state, ss, reward_fn, cfg, schedule, num_iters,
+                channel=channel, chan_state=cs)
+            return state, ss, cs, _eval_score(state, ekey, reward_fn,
+                                              eval_episodes)
+
+        return jax.vmap(one_chan)(states, sstates, eval_keys, cstates)
 
     def one(state, ss, ekey):
         state, ss, _m = netes.run_scheduled(state, ss, reward_fn, cfg,
@@ -232,10 +273,12 @@ def _tree_index(tree, i):
 
 
 def _run_round(alive: List[int], plans: List[_Plan], states: dict,
-               sstates: dict, eval_root, rnd: int, sc: SearchConfig,
-               reward_fn, iters: int, episodes: int) -> Dict[int, float]:
+               sstates: dict, cstates: dict, eval_root, rnd: int,
+               sc: SearchConfig, reward_fn, iters: int,
+               episodes: int) -> Dict[int, float]:
     """Train + score every surviving candidate (one vmapped program per
-    cohort). Mutates ``states``/``sstates`` in place; returns scores."""
+    cohort). Mutates ``states``/``sstates``/``cstates`` in place;
+    returns scores."""
     groups: Dict[tuple, List[int]] = {}
     for cid in alive:
         groups.setdefault(plans[cid].cohort, []).append(cid)
@@ -245,18 +288,35 @@ def _run_round(alive: List[int], plans: List[_Plan], states: dict,
         eval_keys = jnp.stack([
             jax.random.fold_in(jax.random.fold_in(eval_root, c), rnd)
             for c in cids])
+        channel = plans[cids[0]].channel
+        cstacked = (_tree_stack([cstates[c] for c in cids])
+                    if channel is not None else None)
         if key[0] == "static":
             topos = topology_repr.stack([plans[c].topo for c in cids])
-            new_states, vec = _round_static(
+            out = _round_static(
                 stacked, topos, eval_keys, reward_fn=reward_fn,
-                cfg=sc.netes, num_iters=iters, eval_episodes=episodes)
+                cfg=sc.netes, num_iters=iters, eval_episodes=episodes,
+                channel=channel, cstates=cstacked)
+            if channel is not None:
+                new_states, new_cs, vec = out
+                for i, c in enumerate(cids):
+                    cstates[c] = _tree_index(new_cs, i)
+            else:
+                new_states, vec = out
         else:
             schedule = plans[cids[0]].schedule
             sstacked = _tree_stack([sstates[c] for c in cids])
-            new_states, new_ss, vec = _round_scheduled(
+            out = _round_scheduled(
                 stacked, sstacked, eval_keys, reward_fn=reward_fn,
                 cfg=sc.netes, schedule=schedule, num_iters=iters,
-                eval_episodes=episodes)
+                eval_episodes=episodes, channel=channel,
+                cstates=cstacked)
+            if channel is not None:
+                new_states, new_ss, new_cs, vec = out
+                for i, c in enumerate(cids):
+                    cstates[c] = _tree_index(new_cs, i)
+            else:
+                new_states, new_ss, vec = out
             for i, c in enumerate(cids):
                 sstates[c] = _tree_index(new_ss, i)
         vec = np.asarray(vec, np.float64)
@@ -281,7 +341,7 @@ def run_search(task: str, sc: SearchConfig,
     reward_fn, dim, init_fn, _env, _policy = resolve_task(task)
     pool = seed_pool(
         make_grid(sc.n_agents, sc.families, sc.densities, sc.seeds,
-                  sc.schedules),
+                  sc.schedules, sc.channels),
         sc.pool_size, keep_families=sc.keep_families)
     if not pool:
         raise ValueError("empty candidate pool")
@@ -295,6 +355,9 @@ def run_search(task: str, sc: SearchConfig,
     sstates = {cid: plans[cid].schedule.init()
                for cid in range(len(pool))
                if plans[cid].schedule is not None}
+    cstates = {cid: plans[cid].channel.init(states[cid].thetas)
+               for cid in range(len(pool))
+               if plans[cid].channel is not None}
 
     alive = list(range(len(pool)))
     history: List[dict] = []
@@ -316,13 +379,15 @@ def run_search(task: str, sc: SearchConfig,
                 f"{fingerprint!r}); resuming would silently mix states "
                 "across searches — use a fresh --search-checkpoint-dir")
         alive = [int(c) for c in meta["alive"]]
-        like = _ckpt_blob(alive, states, sstates)
+        like = _ckpt_blob(alive, states, sstates, cstates)
         done_round, restored = checkpoint.restore_train_state(ckpt_dir,
                                                               like)
         for c in alive:
             states[c] = restored["netes"][str(c)]
         for c, v in restored.get("sched", {}).items():
             sstates[int(c)] = v
+        for c, v in restored.get("chan", {}).items():
+            cstates[int(c)] = v
         last_scores = {int(k): v for k, v in meta["scores"].items()}
         history = meta["history"]
         start_round = done_round + 1
@@ -331,8 +396,9 @@ def run_search(task: str, sc: SearchConfig,
     for rnd in range(start_round, total_rounds):
         iters = sc.round_iters * (2 ** rnd if sc.widen else 1)
         episodes = sc.eval_episodes * (2 ** rnd if sc.widen else 1)
-        scores = _run_round(alive, plans, states, sstates, eval_root, rnd,
-                            sc, reward_fn, iters, episodes)
+        scores = _run_round(alive, plans, states, sstates, cstates,
+                            eval_root, rnd, sc, reward_fn, iters,
+                            episodes)
         last_scores.update(scores)
         ranked = sorted(alive, key=lambda c: (-scores[c], c))
         survivors = sorted(ranked[:max(1, (len(alive) + 1) // 2)])
@@ -345,7 +411,8 @@ def run_search(task: str, sc: SearchConfig,
         alive = survivors
         if ckpt_dir is not None:
             checkpoint.save_train_state(
-                ckpt_dir, rnd, _ckpt_blob(alive, states, sstates),
+                ckpt_dir, rnd, _ckpt_blob(alive, states, sstates,
+                                          cstates),
                 extra={"task": task,
                        "fingerprint": fingerprint,
                        "alive": alive,
@@ -375,9 +442,13 @@ def _search_fingerprint(task: str, sc: SearchConfig) -> str:
     return json.dumps({"task": task, **d}, sort_keys=True, default=str)
 
 
-def _ckpt_blob(alive: List[int], states: dict, sstates: dict) -> dict:
+def _ckpt_blob(alive: List[int], states: dict, sstates: dict,
+               cstates: dict) -> dict:
     blob = {"netes": {str(c): states[c] for c in alive}}
     sched = {str(c): sstates[c] for c in alive if c in sstates}
     if sched:
         blob["sched"] = sched
+    chan = {str(c): cstates[c] for c in alive if c in cstates}
+    if chan:
+        blob["chan"] = chan
     return blob

@@ -26,11 +26,8 @@ class ServeEngine:
         self.dtype = dtype
         self._decode = jax.jit(
             partial(transformer.decode_step, cfg=cfg))
-
-    def _prefill(self, batch: Dict) -> jax.Array:
-        """Run the full-sequence forward; returns last-position logits."""
-        logits = transformer.forward(self.params, self.cfg, batch)
-        return logits[:, -1]
+        self._prefill = jax.jit(
+            partial(transformer.prefill, cfg=cfg))
 
     def generate(self, prompts: jax.Array, new_tokens: int = 16,
                  temperature: float = 0.0,
@@ -38,29 +35,32 @@ class ServeEngine:
                  extra_batch: Optional[Dict] = None) -> np.ndarray:
         """prompts: (B, S_prompt) int32 → (B, new_tokens) int32.
 
-        Prefill computes the prompt logits; the cache is then warmed by
-        teacher-forcing the prompt through decode_step (single-host
-        convenience — a production engine writes prefill KV directly).
+        The prompt runs as ONE jitted full-sequence forward
+        (``transformer.prefill``) that writes the decode cache — KV
+        slots, SSM/WKV states, token shifts — directly, instead of
+        teacher-forcing the prompt through O(S_prompt) ``decode_step``
+        calls (prefill ≡ decode-warm parity is tested in
+        tests/test_serve_prefill.py). Decode then proceeds token by
+        token as before.
         """
         b, s_prompt = prompts.shape
         batch = {"tokens": prompts, **(extra_batch or {})}
+        # decode_step embeds tokens only, so the token-by-token path has
+        # never attended vision patches; keep prefill consistent with it
+        # (concatenating patches would also shift every RoPE position
+        # the decode loop later assumes).
+        batch.pop("patch_embeds", None)
         cache = transformer.init_cache(self.cfg, b,
                                        max(self.max_len,
                                            s_prompt + new_tokens),
                                        self.dtype)
-        if self.cfg.is_encoder_decoder:
-            enc = batch.get("frames")
-            if enc is None:
-                raise ValueError("encoder-decoder serving needs 'frames'")
-            from repro.models.transformer import _encode
-            cache["enc_out"] = _encode(self.params, self.cfg, enc)
+        if self.cfg.is_encoder_decoder and batch.get("frames") is None:
+            raise ValueError("encoder-decoder serving needs 'frames'")
 
-        # warm the cache on the prompt
-        for t in range(s_prompt):
-            logits, cache = self._decode(
-                self.params, token=prompts[:, t:t + 1], cache=cache,
-                pos=jnp.full((b,), t, jnp.int32))
+        last_logits, cache = self._prefill(self.params, batch=batch,
+                                           cache=cache)
         out: List[np.ndarray] = []
+        logits = last_logits[:, None]                   # (B, 1, V)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if temperature > 0 and key is not None:
             key, sub = jax.random.split(key)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
+from repro.comm import channel as comm_channel
+from repro.comm.channel import Channel, ChannelSpec
 from repro.configs.base import ModelConfig
 from repro.core import netes, topology_repr, topology_sched
 from repro.core.netes import NetESConfig
@@ -51,6 +53,10 @@ class TrainConfig:
     # Time-varying topology (DESIGN.md §9): a ScheduleSpec, or its string
     # form ("resample_er(period=8)", ...) as constructor sugar.
     schedule: Optional[Union[ScheduleSpec, str]] = None
+    # Lossy communication channel (DESIGN.md §11): a ChannelSpec, or its
+    # string form ("quantize(bits=8)|dropout(p=0.1)") as sugar. None ⇒
+    # the idealized (channel-free) path, bit-identical to "lossless".
+    channel: Optional[Union[ChannelSpec, str]] = None
     seed: int = 0
     eval_every: int = 0             # 0 ⇒ paper protocol (prob 0.08)
     eval_episodes: int = 16
@@ -72,15 +78,18 @@ class TrainConfig:
             self.topo_seed = self.topology.seed
         if isinstance(self.schedule, str):
             self.schedule = ScheduleSpec.parse(self.schedule)
+        if isinstance(self.channel, str):
+            self.channel = ChannelSpec.parse(self.channel)
 
     @classmethod
     def from_search_result(cls, result, **overrides) -> "TrainConfig":
         """Build a TrainConfig from a ``repro.search.SearchResult``: the
-        tournament's winning topology (and schedule, if the winner was a
-        time-varying candidate) becomes the run's communication graph.
-        Any TrainConfig field can be overridden (``iters``, ``seed``,
-        ``netes``, ...)."""
-        kw = dict(topology=result.topology, schedule=result.schedule)
+        tournament's winning topology (and schedule/channel, if the
+        winner was a time-varying or lossy-link candidate) becomes the
+        run's communication graph. Any TrainConfig field can be
+        overridden (``iters``, ``seed``, ``netes``, ...)."""
+        kw = dict(topology=result.topology, schedule=result.schedule,
+                  channel=result.channel)
         kw.update(overrides)
         return cls(**kw)
 
@@ -100,6 +109,15 @@ def build_schedule(tc: TrainConfig) -> Optional[TopologySchedule]:
                                            tc.representation)
 
 
+def build_channel(tc: TrainConfig) -> Optional[Channel]:
+    """Compile ``tc.channel`` for the run's population (None if the
+    config has no channel — channel-free runs keep the legacy path,
+    which a ``lossless`` channel reproduces bit-for-bit)."""
+    if tc.channel is None:
+        return None
+    return comm_channel.compile_channel(tc.channel, tc.n_agents)
+
+
 def build_adjacency(tc: TrainConfig) -> jnp.ndarray:
     """Dense (N, N) adjacency — kept for graph-statistics consumers."""
     return jnp.asarray(tc.topology.build())
@@ -113,11 +131,15 @@ def train_rl_netes(task: str, tc: TrainConfig,
     metric trace (best-agent noise-free episodes).
 
     With ``tc.schedule`` set, the topology anneals/resamples/rotates on
-    device inside the same scans (DESIGN.md §9). With
+    device inside the same scans (DESIGN.md §9). With ``tc.channel``
+    set, every inter-agent message rides the lossy channel (DESIGN.md
+    §11) — the history gains per-iteration realized message counts plus
+    ``realized_msgs``/``realized_wire_bytes`` totals. With
     ``tc.checkpoint_dir`` set, the full train state — NetES state
-    (step + RNG), eval RNG, and topology-schedule state — is saved at
-    every eval point and restored from ``latest.json`` on the next call,
-    resuming mid-schedule bit-for-bit; a resumed run's history covers
+    (step + RNG), eval RNG, topology-schedule state, and channel
+    state — is saved at every eval point and restored from
+    ``latest.json`` on the next call, resuming mid-schedule (and
+    mid-channel-stream) bit-for-bit; a resumed run's history covers
     only the post-resume iterations.
     """
     key = jax.random.PRNGKey(tc.seed)
@@ -129,8 +151,12 @@ def train_rl_netes(task: str, tc: TrainConfig,
     else:
         topo, sstate = build_topology(tc), None
     state = netes.init_state(key, tc.n_agents, dim, init_fn=init_fn)
+    channel = build_channel(tc)
+    cstate = channel.init(state.thetas) if channel is not None else None
     history: Dict[str, List] = {"reward_mean": [], "reward_max": [],
                                 "eval": [], "eval_iter": []}
+    if channel is not None:
+        history["msgs"] = []
     t0 = time.time()
 
     # Paper §5.2 eval protocol, decided host-side UP FRONT (prob 0.08 per
@@ -156,6 +182,9 @@ def train_rl_netes(task: str, tc: TrainConfig,
             np.asarray(m["reward_mean"], np.float64).reshape(-1).tolist())
         history["reward_max"].extend(
             np.asarray(m["reward_max"], np.float64).reshape(-1).tolist())
+        if "msgs" in m:
+            history["msgs"].extend(
+                np.asarray(m["msgs"], np.float64).reshape(-1).tolist())
 
     eval_key = jax.random.PRNGKey(tc.seed + 999)
 
@@ -165,6 +194,8 @@ def train_rl_netes(task: str, tc: TrainConfig,
         blob = {"netes": state, "eval_key": eval_key}
         if sstate is not None:
             blob["sched"] = sstate
+        if cstate is not None:
+            blob["chan"] = cstate
         return blob
 
     ckpt_dir = pathlib.Path(tc.checkpoint_dir) if tc.checkpoint_dir \
@@ -175,6 +206,45 @@ def train_rl_netes(task: str, tc: TrainConfig,
                                                                _blob())
         state, eval_key = restored["netes"], restored["eval_key"]
         sstate = restored.get("sched", sstate)
+        cstate = restored.get("chan", cstate)
+
+    def advance(n_iters: int):
+        """n_iters fused training iterations with whatever state axes
+        (schedule × channel) this run carries joined into the scan."""
+        nonlocal state, sstate, cstate
+        if schedule is not None and channel is not None:
+            state, sstate, cstate, m = netes.run_scheduled(
+                state, sstate, reward_fn, tc.netes, schedule,
+                num_iters=n_iters, channel=channel, chan_state=cstate)
+        elif schedule is not None:
+            state, sstate, m = netes.run_scheduled(
+                state, sstate, reward_fn, tc.netes, schedule,
+                num_iters=n_iters)
+        elif channel is not None:
+            state, cstate, m = netes.run(
+                state, topo, reward_fn, tc.netes, num_iters=n_iters,
+                channel=channel, chan_state=cstate)
+        else:
+            state, m = netes.run(state, topo, reward_fn, tc.netes,
+                                 num_iters=n_iters)
+        drain(m)
+
+    def advance_one():
+        nonlocal state, sstate, cstate
+        if schedule is not None and channel is not None:
+            state, sstate, cstate, m = netes.scheduled_step(
+                state, sstate, reward_fn, tc.netes, schedule,
+                channel=channel, chan_state=cstate)
+        elif schedule is not None:
+            state, sstate, m = netes.scheduled_step(
+                state, sstate, reward_fn, tc.netes, schedule)
+        elif channel is not None:
+            state, cstate, m = netes.netes_step(
+                state, topo, reward_fn, tc.netes, channel=channel,
+                chan_state=cstate)
+        else:
+            state, m = netes.netes_step(state, topo, reward_fn, tc.netes)
+        drain(m)
 
     start = resume_iter + 1
     for it in eval_iters:
@@ -183,23 +253,10 @@ def train_rl_netes(task: str, tc: TrainConfig,
         todo = it - start + 1
         start = it + 1
         while todo >= scan_chunk:
-            if schedule is not None:
-                state, sstate, m = netes.run_scheduled(
-                    state, sstate, reward_fn, tc.netes, schedule,
-                    num_iters=scan_chunk)
-            else:
-                state, m = netes.run(state, topo, reward_fn, tc.netes,
-                                     num_iters=scan_chunk)
-            drain(m)
+            advance(scan_chunk)
             todo -= scan_chunk
         for _ in range(todo):   # tail < scan_chunk: jitted single steps
-            if schedule is not None:
-                state, sstate, m = netes.scheduled_step(
-                    state, sstate, reward_fn, tc.netes, schedule)
-            else:
-                state, m = netes.netes_step(state, topo, reward_fn,
-                                            tc.netes)
-            drain(m)
+            advance_one()
         eval_key, k_eval = jax.random.split(eval_key)
         if env is not None:
             score = float(evaluate_best(env, policy, state.best_theta,
@@ -216,6 +273,14 @@ def train_rl_netes(task: str, tc: TrainConfig,
                  "reward_mean": history["reward_mean"][-1]})
     history["final_eval"] = history["eval"][-1] if history["eval"] else None
     history["max_eval"] = max(history["eval"]) if history["eval"] else None
+    if channel is not None:
+        # realized (not modeled) traffic: messages that actually moved ×
+        # the pipeline's encoded bytes per message — the resilience
+        # bench's regression-gated metric (DESIGN.md §11).
+        total_msgs = float(np.sum(history["msgs"], dtype=np.float64))
+        history["realized_msgs"] = total_msgs
+        history["realized_wire_bytes"] = int(
+            round(total_msgs * channel.payload_bytes(dim)))
     history["wall_s"] = time.time() - t0
     return history
 
@@ -251,11 +316,12 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
     key = jax.random.PRNGKey(tc.seed)
     n = tc.n_agents
     schedule = build_schedule(tc)
+    channel = build_channel(tc)
     if schedule is not None:
         sstate = schedule.init()
         step = netes_dist.make_replica_train_step(
             cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1,
-            schedule=schedule)
+            schedule=schedule, channel=channel)
     else:
         sstate = None
         # The step dispatches on (and closes over) the Topology itself —
@@ -264,7 +330,7 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
         # O(N·K) footprint at fleet scale).
         step = netes_dist.make_replica_train_step(
             cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1,
-            topology=build_topology(tc))
+            topology=build_topology(tc), channel=channel)
     step = jax.jit(step)
     if same_init:
         p0 = transformer.init_params(key, cfg)
@@ -273,6 +339,7 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
     else:
         params = jax.vmap(lambda k: transformer.init_params(k, cfg))(
             jax.random.split(key, n))
+    cstate = channel.init(params) if channel is not None else None
     history: Dict[str, List] = {"loss_mean": [], "reward_max": []}
 
     # Metrics stay on device and are drained once per chunk — the
@@ -296,8 +363,13 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
                            k_batch)
         batch = jax.tree.map(
             lambda x: x.reshape((n, per_agent_batch) + x.shape[1:]), batch)
-        if schedule is not None:
+        if schedule is not None and channel is not None:
+            params, m, sstate, cstate = step(params, None, batch, k_step,
+                                             sstate, cstate)
+        elif schedule is not None:
             params, m, sstate = step(params, None, batch, k_step, sstate)
+        elif channel is not None:
+            params, m, cstate = step(params, None, batch, k_step, cstate)
         else:
             params, m = step(params, None, batch, k_step)
         pending.append((it, m))

@@ -83,6 +83,21 @@ np.testing.assert_allclose(
     np.asarray(out_w), np.asarray(jnp.einsum("ji,id->jd", wweights, thetas)),
     rtol=1e-5, atol=1e-5, err_msg="weighted-sparse")
 
+# quantized wire codec (DESIGN.md §11): every backend moves the SAME
+# per-row encoded payload, so each must equal the dense contraction of
+# codec(thetas) — per-shard encoding ≡ rowwise encoding of the full θ
+from repro.comm import channel as comm_channel
+ch = comm_channel.compile_channel("quantize(bits=8)", n)
+q_expect = jnp.einsum("ji,id->jd", weights, ch.codec(thetas, batched=True))
+for representation in ("dense", "sparse", "circulant"):
+    topo = topology_repr.from_dense(adj, representation)
+    mix_q = make_topology_mixing(mesh, "data", topo, channel=ch)
+    with mesh:
+        out_q = jax.jit(mix_q)(weights, thetas)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(q_expect),
+                               rtol=1e-5, atol=1e-5,
+                               err_msg=f"codec-{representation}")
+
 # rotating circulant (DESIGN.md §9): the lax.switch-over-ppermute-chains
 # backend must equal the offset-walk oracle on the ROTATED offsets at
 # every step of the cycle (and wrap around it)
