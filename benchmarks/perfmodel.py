@@ -18,8 +18,8 @@ Element width (DESIGN.md §11): payloads default to f32
 quantize(8), 0.5 for quantize(4), ⅛ for sign) and an event-triggered
 stage scales the EXPECTED traffic by its measured ``trigger_rate``.
 
-**Crossover note (re-derived for sub-f32 payloads).** Comparing comm
-terms, sparse beats dense when
+**Crossover note (re-derived for sub-f32 payloads and the fused
+path).** Comparing comm terms, sparse beats dense when
 ``K · contention · elem_bytes_sparse < (N−1) · elem_bytes_dense``, i.e.
 K* ≈ (N−1)/3 when both sides move f32 (the ≈``SPARSE_DENSITY_CUTOFF``
 heuristic). The ratio of element widths shifts it linearly: a dense f32
@@ -28,6 +28,17 @@ K* ≈ 4(N−1)/3 — i.e. a quantized sparse channel wins on wire bytes at
 EVERY density; conversely an int8 dense all-gather against f32 fetches
 pulls it down to K* ≈ (N−1)/12. Compression and topology multiply, so
 the resilience bench sweeps them jointly.
+
+The FUSED wire path (DESIGN.md §12) doesn't change wire bytes at all —
+it deletes the receiver-side decode pass (2·recv·D VPU ops, charged
+once per pipeline, see ``modeled_step_us``). Both sides of the
+quantized sparse-vs-dense comparison carry one decode term, so the
+comm-term crossover K* above is unchanged; what fusion changes is the
+LOCAL floor: an unfused quantized sparse step pays 2·K·D/VPU decode +
+2·K·D/VPU contraction, the fused step pays only the contraction —
+halving the VPU term and making the modeled quantized-sparse step
+strictly ≤ its unfused self at every (N, K). kernel_bench's
+``fused_crossover`` table gates the measured counterpart.
 
 ``wire_bytes`` is the regression-gated metric (DESIGN.md §8): a
 deterministic function of (topology, channel) alone, comparable across
@@ -61,17 +72,32 @@ def wire_bytes(n: int, fan_in: int, kind: str, d: int = D_PROD,
 
 def modeled_step_us(n: int, fan_in: int, kind: str, d: int = D_PROD,
                     elem_bytes: float = 4.0,
-                    trigger_rate: float = 1.0) -> float:
-    """Modeled production step time (µs) — comm + local contraction.
+                    trigger_rate: float = 1.0,
+                    codec_stages: int = 0,
+                    fused: bool = False) -> float:
+    """Modeled production step time (µs) — comm + decode + contraction.
 
     Circulant ppermute chains are statically scheduled ring rotations, so
     unlike arbitrary sparse neighbor sets they pay no contention derating
     (DESIGN.md §2). Quantized payloads shrink the bandwidth term but not
-    the hop latency or the local contraction (decode back to f32 before
-    the FMA); event triggering scales the expected bandwidth AND the
-    expected hop count (an untriggered source sends nothing).
+    the hop latency; event triggering scales the expected bandwidth AND
+    the expected hop count (an untriggered source sends nothing).
+
+    ``codec_stages``: number of payload-codec stages (quantize/topk) in
+    the channel pipeline. A receiver decodes each message in ONE pass
+    regardless of how many stages composed the encoding — the stages
+    narrow what moves on the wire, but dequantization back to f32 is a
+    single ``codes · scale`` sweep (2 VPU ops/element over the received
+    fan-in) — so the decode term is charged once iff ``codec_stages >
+    0``, never per stage. ``fused=True`` (DESIGN.md §12) drops the term
+    entirely: the fused kernel reads wire codes inside the contraction
+    and no separate decode pass exists.
     """
     wb = wire_bytes(n, fan_in, kind, d, elem_bytes, trigger_rate)
+    recv = (n - 1) if kind == "dense" else fan_in
+    decode = 0.0
+    if codec_stages > 0 and not fused:
+        decode = 2 * recv * d * trigger_rate / VPU_FLOPS
     if kind == "dense":
         comm = HOP_LAT + wb / ICI_BW
         comp = 2 * n * d / MXU_FLOPS
@@ -79,4 +105,4 @@ def modeled_step_us(n: int, fan_in: int, kind: str, d: int = D_PROD,
         contention = 1.0 if kind == "circulant" else GATHER_CONTENTION
         comm = (fan_in * HOP_LAT * trigger_rate + wb * contention / ICI_BW)
         comp = 2 * fan_in * d / VPU_FLOPS
-    return (comm + comp) * 1e6
+    return (comm + decode + comp) * 1e6

@@ -25,6 +25,10 @@ realized traffic stays below ``2·p``× of FC's — degrading no faster on
 ~a tenth of the wire bytes is what "degrades more gracefully per wire
 byte" cashes out to at CI scale (the paper's N=1000 regime strengthens
 it; see ROADMAP).
+
+The quantized sparse-ER cells run through the FUSED wire kernel
+(DESIGN.md §12); ``*_unfused`` control legs re-run them through the
+decode-then-contract path and gate exact byte and trajectory agreement.
 """
 from __future__ import annotations
 
@@ -67,12 +71,13 @@ DEG_SLACK_PP = 5.0
 
 
 def _tc(family: str, p: float, rep: str, chan: str, seed: int,
-        iters: int) -> TrainConfig:
+        iters: int, fused: bool = True) -> TrainConfig:
     return TrainConfig(
         n_agents=N_RES, iters=iters,
         topology=TopologySpec(family=family, n_agents=N_RES, p=p,
                               seed=seed),
-        representation=rep, channel=chan, seed=seed,
+        representation=rep, channel=chan, channel_fused=fused,
+        seed=seed,
         eval_every=max(1, iters // 2), eval_episodes=4,
         # low broadcast probability: the paper's global exploit step
         # washes out topology (and channel) differences; the bench
@@ -130,6 +135,61 @@ def run(quick: bool = False):
                        "realized_msgs": msgs,
                        "elem_bytes": channel.elem_bytes,
                        "timed_compiles": len(compiles)}))
+
+    # ---- fused-vs-unfused controls (DESIGN.md §12) --------------------
+    # The sparse ER quantized cells above ran through the fused
+    # mixing∘codec∘mask wire kernel (``TrainConfig.channel_fused``
+    # defaults True and ``Channel.wire_fused`` holds for a single
+    # quantize stage on a sparse graph). These control legs re-run them
+    # through the decode-then-contract path and gate EXACT agreement:
+    # fusion must change neither the realized wire traffic (exact-gated
+    # bytes) nor the training trajectory — only the step time.
+    dim = resolve_task(TASK)[1]
+    for suffix in ("q8", "q4", "q1"):
+        chan = dict(CHANNELS)[suffix]
+        for seed in seeds:
+            train_rl_netes(TASK, _tc("erdos_renyi", P_ER, "sparse",
+                                     chan, seed, iters, fused=False))
+        scores, msgs, wall = [], 0.0, 0.0
+        with common.count_backend_compiles() as compiles:
+            for seed in seeds:
+                h = train_rl_netes(TASK, _tc("erdos_renyi", P_ER,
+                                             "sparse", chan, seed,
+                                             iters, fused=False))
+                scores.append(h["max_eval"])
+                msgs += h["realized_msgs"]
+                wall += h["wall_s"]
+        assert len(compiles) == 0, (
+            f"{suffix}_unfused: timed replays recompiled "
+            f"{len(compiles)}×")
+        channel = comm_channel.compile_channel(chan, N_RES, fused=False)
+        realized = int(round(msgs * channel.payload_bytes(dim)))
+        mean_eval = float(np.mean(scores))
+        assert realized == bytes_[("erdos_renyi", suffix)], (
+            f"{suffix}: fused wire bytes "
+            f"{bytes_[('erdos_renyi', suffix)]} != unfused {realized} "
+            "— fusion changed what moved on the wire")
+        fused_eval = evals[("erdos_renyi", suffix)]
+        assert abs(mean_eval - fused_eval) <= \
+            1e-3 * max(1.0, abs(mean_eval)), (
+            f"{suffix}: fused trajectory diverged from unfused "
+            f"({fused_eval} vs {mean_eval}) — the kernel is not "
+            "codec-exact")
+        step_s = wall / (iters * len(seeds))
+        common.emit(f"resilience.erdos_renyi.{suffix}_unfused", step_s,
+                    f"eval={mean_eval:.1f} realized_mb="
+                    f"{realized / 2 ** 20:.2f} compiles=0")
+        entries.append(registry.Entry(
+            name=f"resilience.erdos_renyi.{suffix}_unfused",
+            wall_s=step_s,
+            wire_bytes=realized,
+            eval_score=mean_eval,
+            extra={"n": N_RES, "p": P_ER, "representation": "sparse",
+                   "channel": chan, "task": TASK, "fused": False,
+                   "seeds": list(seeds), "iters": iters,
+                   "realized_msgs": msgs,
+                   "elem_bytes": channel.elem_bytes,
+                   "timed_compiles": len(compiles)}))
 
     # ---- the graceful-degradation headline ----------------------------
     lossy = [s for s, _ in CHANNELS if s != "lossless"]

@@ -61,10 +61,17 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import topology_repr
+from repro.core import topology_repr, wire_format
 from repro.core.topology_repr import Topology
 
 Array = jax.Array
+
+# The codec's decode as a Pallas-inlinable block function (DESIGN.md §12):
+# pure jnp over aligned (codes, scale) slabs, uniform across q8/q4/q1 —
+# `kernels/netes_fused_mixing` inlines it per tile, `topology_repr`'s
+# dense/circulant fallbacks call it whole-array. Re-exported here so the
+# channel module remains the single façade for codec semantics.
+decode_block = wire_format.decode
 
 STAGE_KINDS = ("lossless", "quantize", "topk", "event_triggered",
                "dropout")
@@ -182,10 +189,21 @@ class ChannelState(NamedTuple):
 class Channel:
     """Compiled (spec × population size) — hashable, so it rides through
     ``jax.jit`` as a static argument while every array lives in the
-    ``ChannelState`` it initializes and advances."""
+    ``ChannelState`` it initializes and advances.
+
+    ``fused`` is a compile-level dispatch preference (hashable, so it is
+    part of the jit-static identity): when True (the default) and the
+    pipeline is ``wire_quantized``, channel-carrying steps hand the
+    contraction the encoded ``WirePayload`` (``apply_wire``) instead of
+    the fake-quant f32 payload, and ``topology_repr`` routes sparse
+    graphs through ``kernels/netes_fused_mixing``. False forces the
+    legacy decode-then-contract path — the benches' unfused control
+    legs. Either way the channel's *semantics* (scale, rounding, masks,
+    traffic accounting) are identical."""
 
     spec: ChannelSpec
     n: int
+    fused: bool = True
 
     @property
     def lossless(self) -> bool:
@@ -204,6 +222,34 @@ class Channel:
             if s.kind == "dropout":
                 return s
         return None
+
+    @property
+    def quantize_stage(self) -> Optional[StageSpec]:
+        for s in self.spec.stages:
+            if s.kind == "quantize":
+                return s
+        return None
+
+    @property
+    def wire_quantized(self) -> bool:
+        """True iff the pipeline admits the wire-form encoding: exactly
+        one quantize stage, with no payload-TRANSFORMING stage after it
+        (a later quantize/topk/event would have to read decoded values,
+        re-materializing what the fusion deletes). ``dropout`` after the
+        quantize is fine — it only produces an edge mask."""
+        kinds = [s.kind for s in self.spec.stages]
+        if kinds.count("quantize") != 1:
+            return False
+        after = kinds[kinds.index("quantize") + 1:]
+        return all(k == "dropout" for k in after)
+
+    def wire_fused(self, topo: Topology) -> bool:
+        """Trace-time dispatch decision for a channel-carrying step:
+        route through ``apply_wire`` + the fused contraction? Sparse
+        only — that is where the (N, K, D) gather the fusion deletes
+        lives; dense/circulant graphs keep the fake-quant path (the
+        encoded payload would be decoded whole-array right back)."""
+        return self.fused and self.wire_quantized and topo.kind == "sparse"
 
     @property
     def elem_bytes(self) -> float:
@@ -292,15 +338,79 @@ class Channel:
                                  _keep_topk(l, f, batched), x)
         return x
 
+    def apply_wire(self, state: ChannelState, topo: Topology, payload: Any
+                   ) -> Tuple[Any, Optional[Any], ChannelState, dict]:
+        """``apply`` with the quantize stage left in WIRE FORM: identical
+        stage order, trigger decisions, dropout draws, and traffic
+        accounting, but the quantize stage ENCODES (``wire_format.encode``)
+        instead of fake-quantizing, so the returned payload is a pytree of
+        ``WirePayload`` leaves the fused contraction reads directly — the
+        decoded f32 payload never materializes. Requires
+        ``wire_quantized`` (checked at trace time): every stage that
+        reads payload VALUES runs before the encode, and only mask-only
+        stages (dropout) follow it."""
+        if not self.wire_quantized:
+            raise ValueError(
+                f"channel {self.spec.label()!r} is not wire-encodable: "
+                "apply_wire needs exactly one quantize stage with only "
+                "dropout after it (see Channel.wire_quantized)")
+        key = state.key
+        x = payload
+        new_last = state.last_sent
+        triggered = None
+        edge_mask = None
+        for st in self.spec.stages:
+            if st.kind == "quantize":
+                x = jax.tree.map(lambda l, b=st.bits:
+                                 wire_format.encode(l, b, batched=True), x)
+            elif st.kind == "topk":
+                x = jax.tree.map(lambda l, f=st.frac:
+                                 _keep_topk(l, f, batched=True), x)
+            elif st.kind == "event_triggered":
+                x, new_last, triggered = _event_select(
+                    x, state.last_sent, st.threshold)
+            else:  # dropout
+                key, sub = jax.random.split(key)
+                edge_mask = dropout_mask(sub, topo, st.p)
+        msgs = realized_messages(topo, edge_mask, triggered)
+        info = {
+            "msgs": msgs,
+            "trigger_frac": (jnp.ones((), jnp.float32) if triggered is None
+                             else triggered.astype(jnp.float32).mean()),
+        }
+        new_state = ChannelState(key=key, last_sent=new_last,
+                                 msgs=state.msgs + msgs)
+        return x, edge_mask, new_state, info
 
-def compile_channel(spec: Optional[ChannelSpec | str], n: int) -> Channel:
+    def encode_wire(self, x: Any, batched: bool = False) -> Any:
+        """``codec`` with the quantize stage left in wire form — the
+        broadcast-best payload's twin of ``apply_wire``. Returns a pytree
+        of ``WirePayload`` leaves for ``fused_broadcast_select``; requires
+        ``wire_quantized`` like ``apply_wire`` does."""
+        if not self.wire_quantized:
+            raise ValueError(
+                f"channel {self.spec.label()!r} is not wire-encodable "
+                "(see Channel.wire_quantized)")
+        for st in self.spec.stages:
+            if st.kind == "quantize":
+                x = jax.tree.map(lambda l, b=st.bits:
+                                 wire_format.encode(l, b, batched), x)
+            elif st.kind == "topk":
+                x = jax.tree.map(lambda l, f=st.frac:
+                                 _keep_topk(l, f, batched), x)
+        return x
+
+
+def compile_channel(spec: Optional[ChannelSpec | str], n: int,
+                    fused: bool = True) -> Channel:
     """Resolve a ``ChannelSpec`` (or its string form; None compiles as
-    lossless) for an n-agent population."""
+    lossless) for an n-agent population. ``fused=False`` pins the legacy
+    fake-quant dispatch (the benches' unfused control legs)."""
     if spec is None:
         spec = ChannelSpec()
     elif isinstance(spec, str):
         spec = ChannelSpec.parse(spec)
-    return Channel(spec=spec, n=n)
+    return Channel(spec=spec, n=n, fused=fused)
 
 
 # ---------------------------------------------------------------------------

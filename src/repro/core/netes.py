@@ -171,11 +171,18 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
         candidates = perturbed
 
     # ---- lossy channel (DESIGN.md §11): encode the per-source payload,
-    # draw this step's live-link mask, advance the channel state ----
+    # draw this step's live-link mask, advance the channel state. Fused-
+    # eligible quantizing channels on sparse graphs keep the payload in
+    # WIRE FORM (apply_wire → WirePayload) so the mixing contraction
+    # reads the int8 codes directly (DESIGN.md §12); the dispatch is
+    # trace-time static (channel and topo.kind are jit-static), so the
+    # compiled scan is branch-free either way.
     wire, edge_mask, chan_info = perturbed, None, None
     if channel is not None:
         topo = topology_repr.as_topology(adj)
-        wire, edge_mask, chan_state, chan_info = channel.apply(
+        chan_apply = (channel.apply_wire if channel.wire_fused(topo)
+                      else channel.apply)
+        wire, edge_mask, chan_state, chan_info = chan_apply(
             chan_state, topo, perturbed)
 
     update = mixing_update(adj, state.thetas, wire, shaped, cfg,
@@ -192,11 +199,20 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
     # the broadcast payload rides the same wire: lossy codecs apply
     # (the receivers adopt the DEGRADED best — what they actually got);
     # eval/best_theta bookkeeping keeps the true argmax parameters.
-    bcast_theta = (iter_best_theta if channel is None
-                   else channel.codec(iter_best_theta, batched=False))
-    new_thetas = jnp.where(do_broadcast,
-                           jnp.broadcast_to(bcast_theta, new_thetas.shape),
-                           new_thetas)
+    if (channel is not None and channel.fused and channel.wire_quantized):
+        # fused variant: decode-where-flagged in one pass over θ — the
+        # decoded (D,) + broadcast (N, D) round-trip never materializes
+        from repro.kernels import netes_fused_mixing as _nfm
+        wp = channel.encode_wire(iter_best_theta, batched=False)
+        new_thetas = _nfm.fused_broadcast_select(
+            wp.codes, wp.scale, do_broadcast, new_thetas)
+    else:
+        bcast_theta = (iter_best_theta if channel is None
+                       else channel.codec(iter_best_theta, batched=False))
+        new_thetas = jnp.where(do_broadcast,
+                               jnp.broadcast_to(bcast_theta,
+                                                new_thetas.shape),
+                               new_thetas)
 
     better = iter_best_reward > state.best_reward
     new_state = NetESState(

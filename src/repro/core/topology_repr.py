@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import topology as topo_gen
+from . import wire_format
 
 Array = jax.Array
 
@@ -61,6 +62,14 @@ Array = jax.Array
 # communication model both favor sparse well below this cutoff, while at
 # p ≳ 0.3 the padded K_max approaches N and sparse is strictly worse.
 SPARSE_DENSITY_CUTOFF = 0.25
+
+# With a fused-eligible quantizing channel (Channel.wire_quantized), the
+# sparse gather reads int8 wire codes — 4× narrower than the f32 dense
+# operand — so the memory-bound crossover vs dense sits ~4× higher
+# (benchmarks/perfmodel.modeled_step_us, kernel_bench fused_crossover).
+# Capped at 0.5: past that the padded K_max itself approaches N and the
+# per-slot gather overhead dominates regardless of operand width.
+FUSED_SPARSE_DENSITY_CUTOFF = 0.5
 
 # A circulant offset chain costs one ppermute per signed offset; past this
 # fraction of the ring the chain stops beating one optimized all-gather.
@@ -198,8 +207,8 @@ def _exact_circulant_offsets(adj: np.ndarray):
                                   rebuilt) else None
 
 
-def select_representation(adj: np.ndarray) -> str:
-    """Pick the cheapest representation a graph admits (DESIGN.md §3).
+def select_representation(adj: np.ndarray, channel=None) -> str:
+    """Pick the cheapest representation a graph admits (DESIGN.md §3, §12).
 
     1. circulant — the graph is exactly a symmetric self-looped circulant
        with a small enough offset set that the ppermute chain beats one
@@ -207,6 +216,14 @@ def select_representation(adj: np.ndarray) -> str:
     2. sparse — max degree ≤ ``SPARSE_DENSITY_CUTOFF``·N, so the padded
        gather does ≪ the dense contraction's work;
     3. dense — everything else (the always-correct fallback).
+
+    ``channel`` (optional, duck-typed to avoid a comm→core→comm cycle):
+    when the active ``comm.channel.Channel`` is fused-eligible
+    (``fused and wire_quantized``), sparse graphs route through the
+    fused wire-form kernel (``kernels/netes_fused_mixing``) whose int8
+    gathers are 4× narrower than the f32 dense operand, so the sparse
+    cutoff rises to ``FUSED_SPARSE_DENSITY_CUTOFF`` — denser graphs get
+    the fused sparse path instead of dense fake-quant.
     """
     adj = np.asarray(adj)
     n = adj.shape[0]
@@ -216,24 +233,29 @@ def select_representation(adj: np.ndarray) -> str:
                                   else 0)
         if signed <= CIRCULANT_OFFSET_CUTOFF * n:
             return "circulant"
+    cutoff = SPARSE_DENSITY_CUTOFF
+    if (channel is not None and getattr(channel, "fused", False)
+            and getattr(channel, "wire_quantized", False)):
+        cutoff = FUSED_SPARSE_DENSITY_CUTOFF
     k_max = int((adj != 0).sum(axis=1).max())
-    if k_max <= SPARSE_DENSITY_CUTOFF * n:
+    if k_max <= cutoff * n:
         return "sparse"
     return "dense"
 
 
-def from_dense(adj, representation: str = "auto") -> Topology:
+def from_dense(adj, representation: str = "auto", channel=None) -> Topology:
     """Build a ``Topology`` from a dense adjacency (host-side).
 
     ``representation`` ∈ {auto, dense, sparse, circulant}. ``auto`` runs
-    ``select_representation``; asking for ``circulant`` on a non-circulant
+    ``select_representation`` (``channel`` biases it toward the fused
+    sparse path, see there); asking for ``circulant`` on a non-circulant
     graph raises.
     """
     adj_np = np.asarray(adj, dtype=np.float32)
     n = adj_np.shape[0]
     deg = jnp.asarray(adj_np.sum(axis=1))
     if representation == "auto":
-        representation = select_representation(adj_np)
+        representation = select_representation(adj_np, channel=channel)
     if representation == "dense":
         return Topology(kind="dense", n=n, deg=deg, adj=jnp.asarray(adj_np))
     if representation == "sparse":
@@ -252,9 +274,10 @@ def from_dense(adj, representation: str = "auto") -> Topology:
 
 
 def from_spec(spec: "topo_gen.TopologySpec",
-              representation: str = "auto") -> Topology:
+              representation: str = "auto", channel=None) -> Topology:
     """TopologySpec → generated graph → representation-selected Topology."""
-    return from_dense(spec.build(), representation=representation)
+    return from_dense(spec.build(), representation=representation,
+                      channel=channel)
 
 
 def as_topology(t: Union[Topology, Array, np.ndarray]) -> Topology:
@@ -384,7 +407,7 @@ def _circulant_shifts(topo: Topology):
 # ---------------------------------------------------------------------------
 
 def weighted_neighbor_sum(topo: Topology, coeff: Array,
-                          values: Array,
+                          values,
                           edge_mask: Optional[Array] = None) -> Array:
     """``out_j = Σ_i a_ji · coeff_i · values_i`` — the Eq. 3 contraction.
 
@@ -394,6 +417,11 @@ def weighted_neighbor_sum(topo: Topology, coeff: Array,
     * dense:     one masked matmul — O(N²·D)
     * sparse:    K_max-step neighbor gather-accumulate — O(N·K·D)
     * circulant: |±Δ|+1 fused rolls of ``coeff ⊙ values`` — O(N·|Δ|·D)
+    * wire:      ``values`` is a ``core.wire_format.WirePayload`` (a
+      quantizing channel's ``apply_wire`` output): sparse graphs run the
+      fused decode∘mask∘sum kernel (``kernels/netes_fused_mixing``,
+      DESIGN.md §12) over the int8 codes directly; dense/circulant decode
+      once and recurse (no (N, K, D) gather exists there to fuse away).
 
     ``edge_mask`` (optional, DESIGN.md §11) is a representation-matched
     live-link mask from ``comm.channel.dropout_mask`` — dense ``(N, N)``,
@@ -401,14 +429,19 @@ def weighted_neighbor_sum(topo: Topology, coeff: Array,
     row per ring shift; the d = 0 self term never drops). A masked edge
     contributes nothing, exactly as if ``a_ji`` were zero this step.
     """
+    if isinstance(values, wire_format.WirePayload):
+        return _wire_neighbor_sum(topo, coeff, values, edge_mask)
     # Weights are formed in the coeff dtype (f32 for rank-shaped rewards)
-    # and cast to the values dtype BEFORE the contraction — bit-identical
-    # to the legacy `(adj * R̃).astype(leaf.dtype)` einsum in
-    # distributed/netes_dist.py, so parity tests cover both call sites.
+    # and cast to the values dtype before contracting, at every call site.
     if topo.kind == "dense":
+        # direct contraction: coeff scales the (N, D) operand, then one
+        # adjacency matmul — the (N, N) `adj ⊙ coeff` weight temp of the
+        # legacy form never materializes (an honest baseline for the
+        # fused kernel; only a masked step still forms one (N, N) temp).
         adj = topo.adj if edge_mask is None else topo.adj * edge_mask
-        w = (adj * coeff[None, :]).astype(values.dtype)
-        return jnp.einsum("ji,i...->j...", w, values)
+        src = coeff.astype(values.dtype).reshape(
+            (-1,) + (1,) * (values.ndim - 1)) * values
+        return jnp.einsum("ji,i...->j...", adj.astype(values.dtype), src)
     if topo.kind == "circulant":
         c = coeff.astype(values.dtype)
         src = c.reshape((-1,) + (1,) * (values.ndim - 1)) * values
@@ -445,6 +478,32 @@ def weighted_neighbor_sum(topo: Topology, coeff: Array,
     for c in range(k4, k_max):
         acc = one(c, acc)
     return acc
+
+
+def _wire_neighbor_sum(topo: Topology, coeff: Array,
+                       wp: "wire_format.WirePayload",
+                       edge_mask: Optional[Array]) -> Array:
+    """The wire-form dispatch case of ``weighted_neighbor_sum``.
+
+    Sparse: hand the int8 codes + per-source scale straight to the fused
+    kernel — trailing payload dims flatten to one D axis (the contraction
+    is elementwise over them) and the per-message ``scale`` (all message
+    axes reduced to size 1) flattens to (N, 1). Dense/circulant: decode
+    once, whole-array, and recurse — those backends never build the
+    per-edge gather the fusion deletes, so wire form buys them nothing.
+    """
+    if topo.kind != "sparse":
+        return weighted_neighbor_sum(topo, coeff,
+                                     wire_format.decode_payload(wp),
+                                     edge_mask=edge_mask)
+    # local import: core stays load-time independent of the kernels layer
+    from repro.kernels import netes_fused_mixing as _nfm
+    n = wp.codes.shape[0]
+    out = _nfm.fused_neighbor_sum(
+        topo.neighbor_idx, topo.neighbor_mask, coeff,
+        wp.codes.reshape(n, -1), wp.scale.reshape(n, -1),
+        edge_mask, out_dtype=jnp.dtype(wp.dtype))
+    return out.reshape(wp.codes.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -539,8 +598,11 @@ def weighted_row_sum(topo: Topology, coeff: Array,
     (the two MUST see the same mask or Eq. 3's self term desyncs from
     the neighbor sum)."""
     if topo.kind == "dense":
+        # matvec, not broadcast-then-reduce: `adj ⊙ coeff` is an (N, N)
+        # temp the dot_general never needs (same micro-opt as the dense
+        # weighted_neighbor_sum).
         adj = topo.adj if edge_mask is None else topo.adj * edge_mask
-        return (adj * coeff[None, :]).sum(axis=1)
+        return adj @ coeff
     if topo.kind == "circulant":
         acc = coeff
         for k, d in enumerate(_circulant_shifts(topo)):

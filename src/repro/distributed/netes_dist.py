@@ -33,9 +33,10 @@ import jax.numpy as jnp
 
 from repro.comm import channel as comm_channel
 from repro.configs.base import ModelConfig
-from repro.core import es_utils, topology_repr
+from repro.core import es_utils, topology_repr, wire_format
 from repro.core.netes import NetESConfig
 from repro.core.topology_repr import Topology
+from repro.core.wire_format import WirePayload
 from repro.models import transformer
 
 
@@ -194,13 +195,20 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                       else topology_repr.as_topology(adj)))
 
         # lossy channel (DESIGN.md §11): encode the transmitted θ tree
-        # (per-agent messages), draw this step's live-link mask
+        # (per-agent messages), draw this step's live-link mask. On a
+        # sparse graph a fused-eligible quantizing channel keeps each
+        # leaf in WIRE FORM (apply_wire → WirePayload leaves): the θ-mix
+        # contractions below read the int8 codes directly through the
+        # fused dispatch in topology_repr (DESIGN.md §12).
         edge_mask, cinfo = None, None
         wire_params = params
         if channel is not None:
-            wire_params, edge_mask, cstate, cinfo = channel.apply(
+            chan_apply = (channel.apply_wire if channel.wire_fused(topo)
+                          else channel.apply)
+            wire_params, edge_mask, cstate, cinfo = chan_apply(
                 cstate, topo, params)
-        wire_leaves = jax.tree.leaves(wire_params)
+        wire_leaves = jax.tree.leaves(
+            wire_params, is_leaf=lambda x: isinstance(x, WirePayload))
 
         def eps_col(src):
             """Per-source ε-mix weight column a_:,src · s_eps[src] — one
@@ -243,8 +251,13 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                                  jax.random.fold_in(ak, lidx))(akeys)
                 eps = jax.vmap(lambda k, sh=leaf.shape[1:], dt=leaf.dtype:
                                jax.random.normal(k, sh, dt))(lkeys)
-                eps_wire = (eps if channel is None
-                            else channel.codec(eps, batched=True))
+                if channel is None:
+                    eps_wire = eps
+                elif channel.wire_fused(topo):
+                    # ε rides the same fused wire path as θ
+                    eps_wire = channel.encode_wire(eps, batched=True)
+                else:
+                    eps_wire = channel.codec(eps, batched=True)
                 mixed = (topology_repr.weighted_neighbor_sum(
                              topo, s_theta, wleaf, edge_mask=edge_mask)
                          + sigma * topology_repr.weighted_neighbor_sum(
@@ -296,8 +309,12 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
                            sh=leaf.shape[2:], lidx=i):
                     leaf_r = jax.lax.dynamic_index_in_dim(
                         lf, r_idx, axis=1, keepdims=False)   # (N, rest)
-                    wire_r = jax.lax.dynamic_index_in_dim(
-                        wl, r_idx, axis=1, keepdims=False)
+                    # wire-form leaves slice without decoding (the
+                    # per-message scale rides along)
+                    wire_r = (wire_format.slice_stack(wl, r_idx)
+                              if isinstance(wl, WirePayload)
+                              else jax.lax.dynamic_index_in_dim(
+                                  wl, r_idx, axis=1, keepdims=False))
                     mixed_theta = topology_repr.weighted_neighbor_sum(
                         topo, s_theta, wire_r, edge_mask=edge_mask)
 
@@ -336,10 +353,23 @@ def make_replica_train_step(cfg: ModelConfig, ncfg: NetESConfig,
             new = leaf + update
             # broadcast event: everyone adopts the best agent's
             # perturbation — as received over the lossy wire
-            if channel is not None:
-                best_pert = channel.codec(best_pert, batched=False)
-            new = jnp.where(do_bcast,
-                            jnp.broadcast_to(best_pert, new.shape), new)
+            if (channel is not None and channel.fused
+                    and channel.wire_quantized):
+                # fused variant: decode-where-flagged in one pass per
+                # leaf (flattened to (N, D)); the decoded + broadcast
+                # intermediates never materialize
+                from repro.kernels import netes_fused_mixing as _nfm
+                wp = channel.encode_wire(best_pert, batched=False)
+                new = _nfm.fused_broadcast_select(
+                    wp.codes.reshape(-1), wp.scale.reshape(-1),
+                    do_bcast, new.reshape(new.shape[0], -1)
+                ).reshape(new.shape)
+            else:
+                if channel is not None:
+                    best_pert = channel.codec(best_pert, batched=False)
+                new = jnp.where(do_bcast,
+                                jnp.broadcast_to(best_pert, new.shape),
+                                new)
             new_leaves.append(new)
         new_params = jax.tree.unflatten(treedef, new_leaves)
 

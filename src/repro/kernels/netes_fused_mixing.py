@@ -1,0 +1,227 @@
+"""Fused mixing∘codec∘mask over quantized wire payloads (DESIGN.md §12).
+
+The unfused channel hot path runs three passes — decode the quantized
+payload to f32, apply the live-link mask, contract the weighted neighbor
+sum — each materializing an (N, K, D)-scale intermediate. This kernel
+does all three in ONE pass over the block-sparse (N, K_max) neighbor
+layout, reading the int8 wire codes (``core.wire_format.WirePayload``)
+directly, so the decoded f32 payload never exists and the gathered
+operand is 4× narrower than the f32 path:
+
+    out[j] = Σ_k m_jk · em_jk · coeff[i_jk] · (codes[i_jk] · scale[i_jk])
+
+The per-source decode ``scale`` folds into the per-slot scalar weight
+once, up front — ``ws_jk = m_jk · em_jk · coeff[i_jk] · scale[i_jk]``,
+an (N, K) f32 array — and each accumulation step is then literally the
+codec's decode block function applied to a gathered int8 slab with the
+folded scale: ``wire_format.decode(codes[i_jk], ws_jk)``
+(``comm.channel.decode_block`` re-exports that exact function). Both
+backends below share this association, so they agree to roundoff.
+
+Two lowerings behind one entry point:
+
+* ``backend="pallas"`` — the TPU mapping, same schedule as
+  ``netes_sparse_mixing``: grid over D tiles; idx/ws resident in VMEM; a
+  ``fori_loop`` over neighbor slots performs one int8 row-gather +
+  decode + accumulate per step, keeping transients at one (N, TILE_D)
+  f32 slab. ``interpret=True`` (the CPU-CI default) validates the exact
+  kernel program against the jnp oracle.
+* ``backend="xla"`` — the same algebra as straight-line jnp (int8
+  gathers, ×4-unrolled slot loop). This is the production path on
+  non-TPU backends, where interpret-mode Pallas inside a training scan
+  would be orders of magnitude slower than XLA's native lowering.
+
+``backend="auto"`` resolves to pallas on TPU and xla elsewhere;
+``REPRO_FUSED_BACKEND`` overrides (CI pins ``pallas`` + interpret for
+the tier-1 kernel gate). The broadcast-best payload path gets the same
+treatment in ``fused_broadcast_select``: decode-where-flagged in one
+pass instead of decode → broadcast → select.
+
+Oracles: ``ref.fused_neighbor_sum_ref`` / ``ref.broadcast_select_ref``
+(decode-then-contract, (N, K, D) materialized — the correctness
+contract the fusion is tested against).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import wire_format
+
+TILE_D = 512
+
+BACKENDS = ("pallas", "xla")
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        backend = os.environ.get("REPRO_FUSED_BACKEND", "auto")
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown fused backend {backend!r}; "
+                         f"available: {BACKENDS + ('auto',)}")
+    return backend
+
+
+def _resolve_interpret(interpret) -> bool:
+    # Repo convention: Pallas kernels interpret by default off-TPU.
+    return jax.default_backend() != "tpu" if interpret is None \
+        else bool(interpret)
+
+
+def _folded_weights(neighbor_idx, neighbor_mask, coeff, scale, edge_mask):
+    """(N, K) f32 per-slot weights with the decode scale folded in.
+    Weight formation stays in f32 (the coeff dtype) exactly like the
+    unfused sparse path in ``topology_repr.weighted_neighbor_sum``."""
+    w = neighbor_mask * jnp.take(coeff.astype(jnp.float32), neighbor_idx)
+    if edge_mask is not None:
+        w = w * edge_mask
+    return w * jnp.take(scale.reshape(-1), neighbor_idx)
+
+
+# ---------------------------------------------------------------------------
+# fused neighbor sum
+# ---------------------------------------------------------------------------
+
+def _fused_neighbor_sum_kernel(idx_ref, ws_ref, codes_ref, out_ref):
+    idx = idx_ref[...]                       # (N, K) i32 — resident
+    ws = ws_ref[...]                         # (N, K) f32 — folded weights
+    codes = codes_ref[...]                   # (N, TILE_D) i8 slab
+    k_max = idx.shape[1]
+
+    def body(c, acc):
+        col = idx[:, c]                      # (N,) source of each receiver
+        # the codec decode, inlined per gathered block, with the scale
+        # already folded into the slot weight
+        return acc + wire_format.decode(jnp.take(codes, col, axis=0),
+                                        ws[:, c, None])
+
+    acc = jax.lax.fori_loop(0, k_max, body,
+                            jnp.zeros(codes.shape, jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_dtype", "tile_d", "interpret", "backend"))
+def fused_neighbor_sum(neighbor_idx: jax.Array, neighbor_mask: jax.Array,
+                       coeff: jax.Array, codes: jax.Array,
+                       scale: jax.Array, edge_mask=None, *,
+                       out_dtype=jnp.float32, tile_d: int = TILE_D,
+                       interpret=None, backend: str = "auto") -> jax.Array:
+    """``out_j = Σ_k mask_jk · em_jk · coeff_{i_jk} · codes_{i_jk} ·
+    scale_{i_jk}`` — Eq. 3's neighbor contraction straight off the wire.
+
+    neighbor_idx (N, K_max) int32; neighbor_mask / edge_mask (N, K_max);
+    coeff (N,) f32; codes (N, D) int8; scale (N, 1) f32 (per-message
+    decode scale). Returns (N, D) in ``out_dtype``. D is padded to the
+    tile internally (pallas backend).
+    """
+    backend = _resolve_backend(backend)
+    ws = _folded_weights(neighbor_idx, neighbor_mask, coeff, scale,
+                         edge_mask)
+
+    if backend == "xla":
+        # One value-exact widening of the wire codes (int8 → f32 is
+        # lossless; the per-message decode SCALE stays folded in ``ws``),
+        # then the same slot loop as the f32 sparse path — the decoded-
+        # message (N, D) slab and the (N, K, D) gather never exist.
+        # XLA:CPU has no fused int8-gather·convert·fma, so keeping the
+        # codes int8 here costs a per-slot convert that measures SLOWER
+        # than one up-front cast; the int8-resident loop lives in the
+        # Pallas lowering.
+        values = codes.astype(jnp.float32)
+        idx = neighbor_idx
+        k_max = idx.shape[1]
+
+        def one(c, acc):
+            col = idx[:, c]
+            return acc + ws[:, c, None] * jnp.take(values, col, axis=0)
+
+        acc = jnp.zeros(codes.shape, jnp.float32)
+        k4 = k_max - k_max % 4
+        if k4:
+            def body(kk, a):
+                for u in range(4):
+                    a = one(kk * 4 + u, a)
+                return a
+            acc = jax.lax.fori_loop(0, k4 // 4, body, acc)
+        for c in range(k4, k_max):
+            acc = one(c, acc)
+        return acc.astype(out_dtype)
+
+    n, d = codes.shape
+    k_max = neighbor_idx.shape[1]
+    d_pad = -(-d // tile_d) * tile_d
+    codes_p = jnp.pad(codes, ((0, 0), (0, d_pad - d)))
+    grid = (d_pad // tile_d,)
+    out = pl.pallas_call(
+        _fused_neighbor_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, k_max), lambda i: (0, 0)),   # idx: resident
+            pl.BlockSpec((n, k_max), lambda i: (0, 0)),   # ws: resident
+            pl.BlockSpec((n, tile_d), lambda i: (0, i)),  # codes slab
+        ],
+        out_specs=pl.BlockSpec((n, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d_pad), out_dtype),
+        interpret=_resolve_interpret(interpret),
+    )(neighbor_idx.astype(jnp.int32), ws.astype(jnp.float32), codes_p)
+    return out[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# fused broadcast-best select
+# ---------------------------------------------------------------------------
+
+def _broadcast_select_kernel(flag_ref, scale_ref, codes_ref, theta_ref,
+                             out_ref):
+    flag = flag_ref[0, 0]
+    theta = theta_ref[...]                   # (N, TILE_D)
+    dec = wire_format.decode(codes_ref[...], scale_ref[...])  # (1, TILE_D)
+    out_ref[...] = jnp.where(flag != 0, dec.astype(theta.dtype), theta)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_d", "interpret", "backend"))
+def fused_broadcast_select(codes: jax.Array, scale: jax.Array,
+                           do_broadcast: jax.Array, thetas: jax.Array, *,
+                           tile_d: int = TILE_D, interpret=None,
+                           backend: str = "auto") -> jax.Array:
+    """``where(do_broadcast, decode(codes, scale), thetas)`` in one pass —
+    every agent adopts the quantized broadcast-best payload without a
+    decoded (D,) + broadcast (N, D) intermediate round-trip.
+
+    codes (D,) int8; scale (1,) f32; do_broadcast scalar bool;
+    thetas (N, D). Returns (N, D) in thetas' dtype.
+    """
+    backend = _resolve_backend(backend)
+    if backend == "xla":
+        dec = wire_format.decode(codes, scale, thetas.dtype)
+        return jnp.where(do_broadcast, dec[None, :], thetas)
+
+    n, d = thetas.shape
+    d_pad = -(-d // tile_d) * tile_d
+    codes_p = jnp.pad(codes, (0, d_pad - d)).reshape(1, d_pad)
+    thetas_p = jnp.pad(thetas, ((0, 0), (0, d_pad - d)))
+    flag = do_broadcast.astype(jnp.int32).reshape(1, 1)
+    grid = (d_pad // tile_d,)
+    out = pl.pallas_call(
+        _broadcast_select_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # flag
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),       # scale
+            pl.BlockSpec((1, tile_d), lambda i: (0, i)),  # codes slab
+            pl.BlockSpec((n, tile_d), lambda i: (0, i)),  # θ slab
+        ],
+        out_specs=pl.BlockSpec((n, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d_pad), thetas.dtype),
+        interpret=_resolve_interpret(interpret),
+    )(flag, scale.reshape(1, 1).astype(jnp.float32), codes_p, thetas_p)
+    return out[:, :d]

@@ -40,6 +40,31 @@ def sparse_mixing_ref(neighbor_idx, neighbor_mask, w_theta, w_eps, theta,
     return mixed.astype(theta.dtype)
 
 
+def fused_neighbor_sum_ref(neighbor_idx, neighbor_mask, coeff, codes,
+                           scale, edge_mask=None, *, out_dtype=jnp.float32):
+    """Decode-then-contract oracle for ``netes_fused_mixing.
+    fused_neighbor_sum`` — deliberately materializes everything the
+    fusion deletes: the decoded f32 payload AND the (N, K, D) gather.
+
+        out_j = Σ_k m_jk · em_jk · coeff_{i_jk} · (codes · scale)_{i_jk}
+    """
+    values = codes.astype(jnp.float32) * scale                  # (N, D)
+    w = neighbor_mask.astype(jnp.float32) * jnp.take(
+        coeff.astype(jnp.float32), neighbor_idx)                # (N, K)
+    if edge_mask is not None:
+        w = w * edge_mask.astype(jnp.float32)
+    v_nb = jnp.take(values, neighbor_idx, axis=0)               # (N, K, D)
+    return jnp.einsum("jk,jkd->jd", w, v_nb).astype(out_dtype)
+
+
+def broadcast_select_ref(codes, scale, do_broadcast, thetas):
+    """Decode → broadcast → select oracle for ``netes_fused_mixing.
+    fused_broadcast_select``. codes (D,), scale (1,), thetas (N, D)."""
+    dec = (codes.astype(jnp.float32) * scale).astype(thetas.dtype)
+    return jnp.where(do_broadcast,
+                     jnp.broadcast_to(dec[None, :], thetas.shape), thetas)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         chunk: int = 0, scale=None):
     """Naive softmax attention. q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd)."""

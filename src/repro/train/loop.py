@@ -57,6 +57,10 @@ class TrainConfig:
     # string form ("quantize(bits=8)|dropout(p=0.1)") as sugar. None ⇒
     # the idealized (channel-free) path, bit-identical to "lossless".
     channel: Optional[Union[ChannelSpec, str]] = None
+    # Fused wire-form dispatch for quantizing channels (DESIGN.md §12).
+    # False pins the legacy decode-then-contract path — the benches'
+    # unfused control legs; semantics are identical either way.
+    channel_fused: bool = True
     seed: int = 0
     eval_every: int = 0             # 0 ⇒ paper protocol (prob 0.08)
     eval_episodes: int = 16
@@ -95,9 +99,12 @@ class TrainConfig:
 
 
 def build_topology(tc: TrainConfig) -> topology_repr.Topology:
-    """TopologySpec → representation-selected Topology (DESIGN.md §3)."""
+    """TopologySpec → representation-selected Topology (DESIGN.md §3).
+    The run's channel biases ``auto`` selection: a fused-eligible
+    quantizing channel raises the sparse cutoff (DESIGN.md §12)."""
     return topology_repr.from_spec(tc.topology,
-                                   representation=tc.representation)
+                                   representation=tc.representation,
+                                   channel=build_channel(tc))
 
 
 def build_schedule(tc: TrainConfig) -> Optional[TopologySchedule]:
@@ -115,7 +122,8 @@ def build_channel(tc: TrainConfig) -> Optional[Channel]:
     which a ``lossless`` channel reproduces bit-for-bit)."""
     if tc.channel is None:
         return None
-    return comm_channel.compile_channel(tc.channel, tc.n_agents)
+    return comm_channel.compile_channel(tc.channel, tc.n_agents,
+                                        fused=tc.channel_fused)
 
 
 def build_adjacency(tc: TrainConfig) -> jnp.ndarray:
