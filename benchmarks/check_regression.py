@@ -27,8 +27,12 @@ Per-metric policy (rationale in DESIGN.md §8):
 * ``wall_s`` — candidate slower than baseline × (1 + tol) fails, with
   tol = 30% (CI-runner noise band). Faster is never a failure. Wall-times
   are only comparable on like hardware, so when the recorded ``env.cpu``
-  differs between baseline and candidate the wall check downgrades to a
-  warning — wire bytes and eval scores still gate.
+  OR ``env.device_count`` differs between baseline and candidate the
+  wall check downgrades to a warning — wire bytes and eval scores still
+  gate. (Device count matters even on one CPU model: the sharded fleet
+  suite forks a ``--xla_force_host_platform_device_count`` subprocess,
+  and a baseline armed from a differently-deviced parent process would
+  gate apples against oranges.)
 
 New candidate entries (no baseline yet) pass with a note; commit refreshed
 baselines (``--update``) to start gating them.
@@ -110,13 +114,28 @@ def compare_artifacts(baseline: Dict[str, Any], candidate: Dict[str, Any],
     # Wall-times gate fatally only on KNOWN like hardware; "unknown" never
     # matches anything (two different machines can both fail the cpuinfo
     # probe).
-    same_cpu = b_cpu == c_cpu and b_cpu not in (None, "", "unknown")
+    same_hw = b_cpu == c_cpu and b_cpu not in (None, "", "unknown")
     if b_cpu in (None, "", "unknown"):
         out.append(Finding(
             group, "-", "env.cpu",
             "baseline cpu is unknown — wall_s runs advisory-only; refresh "
             "baselines from a CI bench-artifacts run (--update) to arm the "
             "wall gate", fatal=False))
+    # Like hardware also means like device topology: a baseline recorded
+    # under a different jax device_count is not wall-comparable (XLA
+    # partitions differently), so the wall gate refuses to arm across a
+    # mismatch. device_count is absent from pre-device_count artifacts;
+    # missing-on-either-side disarms too.
+    b_dc = baseline.get("env", {}).get("device_count")
+    c_dc = candidate.get("env", {}).get("device_count")
+    if same_hw and (b_dc is None or b_dc != c_dc):
+        same_hw = False
+        out.append(Finding(
+            group, "-", "env.device_count",
+            f"baseline device_count={b_dc} vs candidate {c_dc} — wall_s "
+            "runs advisory-only; refresh baselines (--update) from a run "
+            "with the candidate's device layout to re-arm the wall gate",
+            fatal=False))
     b_entries = baseline.get("entries", {})
     c_entries = candidate.get("entries", {})
 
@@ -161,10 +180,10 @@ def compare_artifacts(baseline: Dict[str, Any], candidate: Dict[str, Any],
                         group, name, metric,
                         f"{_fmt(bv)}s -> {_fmt(cv)}s "
                         f"(> +{wall_rel_tol:.0%}"
-                        + ("" if same_cpu
-                           else "; cpus not comparable — advisory")
+                        + ("" if same_hw
+                           else "; hardware not comparable — advisory")
                         + ")",
-                        fatal=same_cpu))
+                        fatal=same_hw))
                 elif cv < bv * (1.0 - wall_rel_tol):
                     out.append(Finding(
                         group, name, metric,

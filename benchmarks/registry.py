@@ -36,7 +36,7 @@ import time
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 SCHEMA_VERSION = 1
-GROUPS = ("topologies", "kernels", "fleet")
+GROUPS = ("topologies", "kernels", "fleet", "sharded")
 PROFILES = ("ci", "quick", "full")
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent

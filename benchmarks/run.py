@@ -1,8 +1,9 @@
 """Benchmark orchestrator — the only entry point for every registered
 benchmark (paper tables/figures, kernel micro-benches, roofline, the
-1024-agent fleet axis). Prints ``name,us_per_call,derived`` CSV to stdout
-and writes the schema-versioned ``BENCH_topologies.json`` /
-``BENCH_kernels.json`` / ``BENCH_fleet.json`` artifacts to ``--out-dir``.
+1024-agent fleet axis, the sharded 16384-agent mesh axis). Prints
+``name,us_per_call,derived`` CSV to stdout and writes the
+schema-versioned ``BENCH_topologies.json`` / ``BENCH_kernels.json`` /
+``BENCH_fleet.json`` / ``BENCH_sharded.json`` artifacts to ``--out-dir``.
 
   python benchmarks/run.py --profile ci            # regression-gated set
   python benchmarks/run.py --profile quick         # everything, smoke scale
@@ -34,9 +35,9 @@ from benchmarks import registry                               # noqa: E402
 # Importing the suite modules populates the registry.
 for _mod in ("fig2a_families", "fig2b_size_sweep", "fig3a_broadcast",
              "fig3b_controls", "fig3c_reach_homog", "fig4_approx",
-             "fig5_density", "fleet_bench", "kernel_bench", "lm_netes",
-             "resilience_bench", "roofline", "search_bench",
-             "table1_er_vs_fc"):
+             "fig5_density", "fleet16k_bench", "fleet_bench",
+             "kernel_bench", "lm_netes", "resilience_bench", "roofline",
+             "search_bench", "table1_er_vs_fc"):
     importlib.import_module(f"benchmarks.{_mod}")
 
 

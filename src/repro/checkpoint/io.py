@@ -37,7 +37,11 @@ def _path_key(path) -> str:
 
 def save_pytree(path: str | pathlib.Path, tree: Any) -> None:
     flat, _ = tree_flatten_with_path(tree)
-    arrays = {_path_key(p): np.asarray(v) for p, v in flat}
+    # device_get gathers mesh-sharded leaves (fleet_shard runs) to host
+    # numpy, so a checkpoint is IDENTICAL for any shard layout and
+    # restores onto any other (shard-invariance, DESIGN.md §13).
+    arrays = {_path_key(p): np.asarray(jax.device_get(v))
+              for p, v in flat}
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     np.savez(path, **arrays)

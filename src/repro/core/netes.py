@@ -243,20 +243,9 @@ def netes_step(state: NetESState, adj: jax.Array, reward_fn: Callable,
 
 @partial(jax.jit,
          static_argnames=("reward_fn", "cfg", "num_iters", "channel"))
-def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
-        cfg: NetESConfig, num_iters: int, channel=None, chan_state=None):
-    """lax.scan driver over ``netes_step`` (fully on-device training loop).
-
-    Jitted at this level so repeat calls with the same shapes hit the
-    executable cache: an EAGER ``lax.scan`` re-traces its body every call
-    and its fresh jaxpr misses the primitive-dispatch cache, recompiling
-    the scan shell once per eval chunk.
-
-    With a ``channel`` (DESIGN.md §11) the ``ChannelState`` joins the
-    scan carry — every encode, trigger decision, and edge drop runs
-    inside the same compiled scan — and the return value becomes
-    ``(state, chan_state, metrics)``."""
-
+def _run_jit(state: NetESState, adj: jax.Array, reward_fn: Callable,
+             cfg: NetESConfig, num_iters: int, channel=None,
+             chan_state=None):
     if channel is not None:
         def cbody(carry, _):
             s, cs = carry
@@ -273,6 +262,36 @@ def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
 
     state, metrics = jax.lax.scan(body, state, None, length=num_iters)
     return state, metrics
+
+
+def run(state: NetESState, adj: jax.Array, reward_fn: Callable,
+        cfg: NetESConfig, num_iters: int, channel=None, chan_state=None,
+        *, mesh=None):
+    """lax.scan driver over ``netes_step`` (fully on-device training loop).
+
+    Jitted one level down (``_run_jit``) so repeat calls with the same
+    shapes hit the executable cache: an EAGER ``lax.scan`` re-traces its
+    body every call and its fresh jaxpr misses the primitive-dispatch
+    cache, recompiling the scan shell once per eval chunk.
+
+    With a ``channel`` (DESIGN.md §11) the ``ChannelState`` joins the
+    scan carry — every encode, trigger decision, and edge drop runs
+    inside the same compiled scan — and the return value becomes
+    ``(state, chan_state, metrics)``.
+
+    With a ``mesh`` (DESIGN.md §13) the fleet runs agent-sharded via
+    ``distributed.fleet_shard`` — same return shapes, halo/all-gather
+    collectives between shards. The sharded engine uses per-agent
+    fold-in RNG, so its trajectories form their own seed universe
+    (identical across mesh sizes, including mesh size 1, but not
+    bitwise-comparable to this module's single (N, D) draw)."""
+    if mesh is not None:
+        from repro.distributed import fleet_shard
+        return fleet_shard.run_sharded(
+            state, adj, reward_fn, cfg, num_iters, mesh,
+            channel=channel, chan_state=chan_state)
+    return _run_jit(state, adj, reward_fn, cfg, num_iters, channel,
+                    chan_state)
 
 
 # ---------------------------------------------------------------------------
@@ -299,16 +318,9 @@ def scheduled_step(state: NetESState, sched_state, reward_fn: Callable,
 @partial(jax.jit,
          static_argnames=("reward_fn", "cfg", "schedule", "num_iters",
                           "channel"))
-def run_scheduled(state: NetESState, sched_state, reward_fn: Callable,
-                  cfg: NetESConfig, schedule, num_iters: int,
-                  channel=None, chan_state=None):
-    """``run`` with the topology state joined into the scan carry: the
-    graph anneals/resamples/rotates ON DEVICE inside one compiled scan
-    (no per-resample re-trace, no host round-trips). Returns
-    ``(state, sched_state, metrics)`` — with a ``channel``, the channel
-    state joins the carry too and the return value becomes
-    ``(state, sched_state, chan_state, metrics)``."""
-
+def _run_scheduled_jit(state: NetESState, sched_state,
+                       reward_fn: Callable, cfg: NetESConfig, schedule,
+                       num_iters: int, channel=None, chan_state=None):
     if channel is not None:
         def cbody(carry, _):
             s, ss, cs = carry
@@ -328,6 +340,29 @@ def run_scheduled(state: NetESState, sched_state, reward_fn: Callable,
     (state, sched_state), metrics = jax.lax.scan(
         body, (state, sched_state), None, length=num_iters)
     return state, sched_state, metrics
+
+
+def run_scheduled(state: NetESState, sched_state, reward_fn: Callable,
+                  cfg: NetESConfig, schedule, num_iters: int,
+                  channel=None, chan_state=None, *, mesh=None):
+    """``run`` with the topology state joined into the scan carry: the
+    graph anneals/resamples/rotates ON DEVICE inside one compiled scan
+    (no per-resample re-trace, no host round-trips). Returns
+    ``(state, sched_state, metrics)`` — with a ``channel``, the channel
+    state joins the carry too and the return value becomes
+    ``(state, sched_state, chan_state, metrics)``.
+
+    With a ``mesh`` the fleet runs agent-sharded through
+    ``distributed.fleet_shard`` (replicated-mixing mode: schedules
+    mutate the live topology, so payloads are all-gathered and each
+    shard keeps its own row slab — DESIGN.md §13)."""
+    if mesh is not None:
+        from repro.distributed import fleet_shard
+        return fleet_shard.run_sharded_scheduled(
+            state, sched_state, reward_fn, cfg, schedule, num_iters,
+            mesh, channel=channel, chan_state=chan_state)
+    return _run_scheduled_jit(state, sched_state, reward_fn, cfg,
+                              schedule, num_iters, channel, chan_state)
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,7 @@ def _wire_codec(channel):
     edge dropout) live in the step builders, not the wire."""
     if channel is None or channel.lossless:
         return lambda x: x
-    if channel.event_stage is not None or channel.dropout_stage is not None:
+    if not channel.collective_eligible:
         raise ValueError(
             "collective-layer channels carry only stateless payload "
             "codecs (quantize/topk); event_triggered and dropout stages "

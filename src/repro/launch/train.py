@@ -46,6 +46,11 @@ def main() -> None:
     ap.add_argument("--checkpoint-dir", default=None,
                     help="save train state at every eval point and "
                          "resume from it if present (rl only)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard the agent axis over this many devices "
+                         "(rl only; DESIGN.md §13). Simulated-mesh CPU "
+                         "runs need XLA_FLAGS=--xla_force_host_platform"
+                         "_device_count=<n> set before launch")
     ap.add_argument("--agents", type=int, default=32)
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
@@ -139,7 +144,8 @@ def main() -> None:
         tc = TrainConfig.from_search_result(
             result, iters=args.iters, seed=args.seed,
             representation=args.representation,
-            checkpoint_dir=args.checkpoint_dir, netes=netes_cfg)
+            checkpoint_dir=args.checkpoint_dir, shards=args.shards,
+            netes=netes_cfg)
     else:
         tc = TrainConfig(
             n_agents=args.agents, iters=args.iters,
@@ -150,6 +156,7 @@ def main() -> None:
             schedule=args.schedule,
             channel=args.channel,
             checkpoint_dir=args.checkpoint_dir,
+            shards=args.shards,
             seed=args.seed,
             netes=netes_cfg)
 

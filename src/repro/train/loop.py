@@ -61,6 +61,12 @@ class TrainConfig:
     # False pins the legacy decode-then-contract path — the benches'
     # unfused control legs; semantics are identical either way.
     channel_fused: bool = True
+    # Shard the agent axis over this many devices (DESIGN.md §13): the
+    # fused scans route through distributed.fleet_shard with halo /
+    # all-gather collectives between shards. None ⇒ single-device path.
+    # Trajectories are identical for ANY shard count (1 included) but
+    # form their own RNG universe vs the unsharded engine.
+    shards: Optional[int] = None
     seed: int = 0
     eval_every: int = 0             # 0 ⇒ paper protocol (prob 0.08)
     eval_episodes: int = 16
@@ -153,6 +159,10 @@ def train_rl_netes(task: str, tc: TrainConfig,
     key = jax.random.PRNGKey(tc.seed)
     reward_fn, dim, init_fn, env, policy = resolve_task(task)
 
+    mesh = None
+    if tc.shards is not None:
+        from repro.distributed import fleet_shard
+        mesh = fleet_shard.build_mesh(tc.shards)
     schedule = build_schedule(tc)
     if schedule is not None:
         topo, sstate = None, schedule.init()
@@ -223,22 +233,28 @@ def train_rl_netes(task: str, tc: TrainConfig,
         if schedule is not None and channel is not None:
             state, sstate, cstate, m = netes.run_scheduled(
                 state, sstate, reward_fn, tc.netes, schedule,
-                num_iters=n_iters, channel=channel, chan_state=cstate)
+                num_iters=n_iters, channel=channel, chan_state=cstate,
+                mesh=mesh)
         elif schedule is not None:
             state, sstate, m = netes.run_scheduled(
                 state, sstate, reward_fn, tc.netes, schedule,
-                num_iters=n_iters)
+                num_iters=n_iters, mesh=mesh)
         elif channel is not None:
             state, cstate, m = netes.run(
                 state, topo, reward_fn, tc.netes, num_iters=n_iters,
-                channel=channel, chan_state=cstate)
+                channel=channel, chan_state=cstate, mesh=mesh)
         else:
             state, m = netes.run(state, topo, reward_fn, tc.netes,
-                                 num_iters=n_iters)
+                                 num_iters=n_iters, mesh=mesh)
         drain(m)
 
     def advance_one():
         nonlocal state, sstate, cstate
+        if mesh is not None:
+            # the sharded engine is a scan-only entry point; a length-1
+            # scan is its single-step form (compiled once per run).
+            advance(1)
+            return
         if schedule is not None and channel is not None:
             state, sstate, cstate, m = netes.scheduled_step(
                 state, sstate, reward_fn, tc.netes, schedule,

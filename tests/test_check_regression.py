@@ -9,13 +9,14 @@ from benchmarks import check_regression as cr
 from benchmarks import registry
 
 
-def make_artifact(group="fleet", cpu="test-cpu", schema=None, **entries):
+def make_artifact(group="fleet", cpu="test-cpu", device_count=1,
+                  schema=None, **entries):
     return {
         "schema_version": (registry.SCHEMA_VERSION if schema is None
                            else schema),
         "group": group,
         "profile": "ci",
-        "env": {"cpu": cpu},
+        "env": {"cpu": cpu, "device_count": device_count},
         "entries": entries,
     }
 
@@ -59,6 +60,28 @@ def test_wall_time_on_different_cpu_is_advisory():
     findings = cr.compare_artifacts(BASE, cand)
     assert fatals(findings) == []
     assert any(f.metric == "wall_s" for f in findings)   # still reported
+
+
+def test_wall_time_on_mismatched_device_count_is_advisory():
+    """Same CPU model but a different jax device layout must not arm the
+    wall gate (the sharded suite's simulated-mesh runs)."""
+    cand = copy.deepcopy(BASE)
+    cand["env"]["device_count"] = 8
+    cand["entries"]["dense"]["wall_s"] = 10.0
+    findings = cr.compare_artifacts(BASE, cand)
+    assert fatals(findings) == []
+    assert any(f.metric == "env.device_count" for f in findings)
+    assert any(f.metric == "wall_s" for f in findings)   # still reported
+
+
+def test_wall_time_without_recorded_device_count_is_advisory():
+    """Pre-device_count baselines (no env.device_count key) never arm
+    the wall gate — refresh them to re-arm."""
+    base = copy.deepcopy(BASE)
+    del base["env"]["device_count"]
+    cand = copy.deepcopy(BASE)
+    cand["entries"]["dense"]["wall_s"] = 10.0
+    assert fatals(cr.compare_artifacts(base, cand)) == []
 
 
 def test_wall_time_improvement_is_noted_not_fatal():

@@ -1,0 +1,273 @@
+"""Sharded fleet engine (DESIGN.md §13): Eq. 3 exactness of the halo /
+dense / full contraction paths on one device, host-side plan byte
+accounting, and — in a subprocess with 8 forced host devices — the
+shard-invariance contract: same seed ⇒ bit-identical trajectories and
+identical realized traffic counters for mesh sizes {1, 2, 8}, plus a
+checkpoint saved on an 8-way mesh restoring bit-for-bit against the
+single-device oracle."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import channel as comm_channel
+from repro.core import netes, topology, topology_repr
+from repro.core.netes import NetESConfig
+from repro.distributed import fleet_shard
+
+N, D = 19, 4
+CFG = NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.0)
+
+
+def _reward(params, key):
+    return -(params * params).sum(axis=-1)
+
+
+def _sparse_topo(n=N, p=0.3, seed=2):
+    return topology_repr.from_dense(
+        topology.erdos_renyi(n, p=p, seed=seed), "sparse")
+
+
+def _expected_one_step(topo, state, cfg):
+    """Pure-numpy Eq. 3 oracle using the engine's per-agent fold-in RNG
+    (p_broadcast=0 keeps the broadcast overwrite out of the picture)."""
+    th = np.asarray(state.thetas)
+    n, d = th.shape
+    _, k_eps, k_eval, _ = jax.random.split(state.key, 4)
+    gid = jnp.arange(n, dtype=jnp.int32)
+    eps = np.asarray(jax.vmap(lambda g: jax.random.normal(
+        jax.random.fold_in(k_eps, g), (d,), dtype=jnp.float32))(gid))
+    pert_pos = th + cfg.sigma * eps
+    pert_neg = th - cfg.sigma * eps
+    r_pos = np.asarray(_reward(jnp.asarray(pert_pos), k_eval))
+    r_neg = np.asarray(_reward(jnp.asarray(pert_neg), k_eval))
+    raw = np.concatenate([r_pos, r_neg])
+    shaped_all = np.asarray(netes.shape_fitness(jnp.asarray(raw),
+                                                cfg.fitness_shaping))
+    shaped = shaped_all[:n] - shaped_all[n:]
+    adj = np.asarray(topo.to_dense()) if hasattr(topo, "to_dense") \
+        else np.ones((n, n), np.float32)
+    mixed = (adj * shaped[None, :]) @ pert_pos
+    wsum = adj @ shaped
+    update = cfg.alpha / (n * cfg.sigma ** 2) * \
+        (mixed - wsum[:, None] * th)
+    if cfg.weight_decay:
+        update = update - cfg.weight_decay * th
+    return th + update
+
+
+@pytest.mark.parametrize("rep", ["sparse", "dense"])
+def test_solo_step_matches_numpy_eq3(rep):
+    topo = topology_repr.from_dense(
+        topology.erdos_renyi(N, p=0.3, seed=2), rep)
+    state0 = netes.init_state(jax.random.PRNGKey(0), N, D)
+    eng = fleet_shard.ShardedNetES(topo, _reward, CFG)
+    st, _ = eng.run(state0, 1)
+    np.testing.assert_allclose(np.asarray(st.thetas),
+                               _expected_one_step(topo, state0, CFG),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_full_marker_matches_dense_all_ones():
+    """The FullyConnected rank-1 path == a dense all-ones adjacency
+    (numerically; the contraction orders differ)."""
+    state0 = netes.init_state(jax.random.PRNGKey(1), N, D)
+    ones = topology_repr.Topology(
+        kind="dense", n=N, deg=jnp.full((N,), float(N)),
+        adj=jnp.ones((N, N), jnp.float32))
+    st_fc, _ = fleet_shard.ShardedNetES(
+        fleet_shard.FullyConnected(N), _reward, CFG).run(state0, 3)
+    st_dn, _ = fleet_shard.ShardedNetES(ones, _reward, CFG).run(state0, 3)
+    np.testing.assert_allclose(np.asarray(st_fc.thetas),
+                               np.asarray(st_dn.thetas),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_plan_modes_and_byte_ordering():
+    """Host-side plan accounting: circulant halo < ER halo < FC gather
+    payload rows at 8 shards — the locality physics the paper's
+    communication argument rests on."""
+    n = 256
+    er = topology_repr.from_dense(
+        topology.erdos_renyi(n, p=0.05, seed=1), "sparse")
+    circ = topology_repr.from_dense(
+        topology.circulant_from_offsets(n, [1, 2, 3]), "circulant")
+    p_er = fleet_shard.make_comm_plan(er, 8)
+    p_circ = fleet_shard.make_comm_plan(circ, 8)
+    p_fc = fleet_shard.make_comm_plan(fleet_shard.FullyConnected(n), 8)
+    assert p_er.mode == "halo" and p_circ.mode == "halo"
+    assert p_fc.mode == "full"
+    assert 0 < p_circ.payload_rows < p_er.payload_rows < p_fc.payload_rows
+    # stateful stages force the replicated fallback
+    ev = comm_channel.compile_channel("event_triggered(threshold=0.01)", n)
+    assert fleet_shard.make_comm_plan(er, 8, channel=ev).mode == \
+        "replicated"
+
+
+def test_collective_bytes_are_exact_ints():
+    eng = fleet_shard.ShardedNetES(_sparse_topo(), _reward, CFG)
+    b = eng.collective_bytes(D)
+    assert all(isinstance(v, int) for v in b.values())
+    assert b["total_bytes"] == (b["payload_bytes"] + b["reward_bytes"]
+                                + b["broadcast_bytes"])
+    # wire codec narrows payload rows from 4D to D+4 bytes
+    q8 = comm_channel.compile_channel("quantize(bits=8)", N)
+    eng_q = fleet_shard.ShardedNetES(_sparse_topo(), _reward, CFG,
+                                     channel=q8)
+    assert eng_q.collective_bytes(D)["payload_bytes"] <= \
+        b["payload_bytes"]
+
+
+def test_train_loop_shards_smoke():
+    from repro.core.topology import TopologySpec
+    from repro.train.loop import TrainConfig, train_rl_netes
+    tc = TrainConfig(
+        n_agents=8, iters=4,
+        topology=TopologySpec(family="erdos_renyi", n_agents=8, p=0.4,
+                              seed=0),
+        seed=0, eval_every=2, eval_episodes=1, shards=1,
+        netes=NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.5))
+    h = train_rl_netes("landscape:sphere", tc)
+    assert len(h["reward_mean"]) == 4
+
+
+def test_checkpoint_roundtrip_solo(tmp_path):
+    from repro.checkpoint import io
+    state0 = netes.init_state(jax.random.PRNGKey(3), N, D)
+    eng = fleet_shard.ShardedNetES(_sparse_topo(), _reward, CFG)
+    st, _ = eng.run(state0, 2)
+    io.save_pytree(tmp_path / "st.npz", st)
+    back = io.load_pytree(tmp_path / "st.npz", st)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# the multi-device contract, in a subprocess (8 forced host devices)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io
+from repro.comm import channel as comm_channel
+from repro.core import netes, topology, topology_repr, topology_sched
+from repro.core.netes import NetESConfig
+from repro.core.topology import TopologySpec
+from repro.distributed import fleet_shard
+
+N, D, ITERS = 257, 16, 5
+cfg = NetESConfig(alpha=0.05, sigma=0.1, p_broadcast=0.5)
+state0 = netes.init_state(jax.random.PRNGKey(0), N, D)
+
+
+def reward_fn(params, key):
+    return -(params * params - jnp.cos(2 * jnp.pi * params)).sum(axis=-1)
+
+
+adj = topology.erdos_renyi(N, p=0.05, seed=3)
+legs = {
+    "dense": (topology_repr.from_dense(adj, "dense"), None),
+    "sparse": (topology_repr.from_dense(adj, "sparse"), None),
+    "circulant": (topology_repr.from_dense(
+        topology.circulant_from_offsets(N, [1, 2, 5]), "circulant"),
+        None),
+    "fc": (fleet_shard.FullyConnected(N), None),
+    "sparse_q8": (topology_repr.from_dense(adj, "sparse"),
+                  comm_channel.compile_channel("quantize(bits=8)", N)),
+    # event trigger + dropout are stateful -> replicated fallback mode
+    "sparse_event": (topology_repr.from_dense(adj, "sparse"),
+                     comm_channel.compile_channel(
+                         "event_triggered(threshold=0.01)|"
+                         "quantize(bits=8)|dropout(p=0.1,seed=0)", N)),
+}
+
+for name, (topo, chan) in legs.items():
+    outs = {}
+    for ndev in (None, 1, 2, 8):
+        mesh = None if ndev is None else fleet_shard.build_mesh(ndev)
+        eng = fleet_shard.ShardedNetES(topo, reward_fn, cfg, mesh=mesh,
+                                       channel=chan)
+        cs = chan.init(state0.thetas) if chan is not None else None
+        res = eng.run(state0, ITERS, chan_state=cs)
+        st, ms = res[0], res[-1]
+        outs[ndev] = (jax.device_get((st.thetas, st.best_theta,
+                                      st.best_reward, st.key)),
+                      jax.device_get(ms.get("msgs")),
+                      jax.device_get(ms["reward_mean"]))
+    ref_arrs, ref_msgs, ref_rm = outs[None]
+    for ndev in (1, 2, 8):
+        arrs, msgs, rm = outs[ndev]
+        for a, b in zip(arrs, ref_arrs):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                (name, ndev, "state")
+        assert np.array_equal(np.asarray(rm), np.asarray(ref_rm)), \
+            (name, ndev, "reward_mean")
+        if ref_msgs is not None:
+            # realized traffic counters are placement-invariant
+            assert np.array_equal(np.asarray(msgs),
+                                  np.asarray(ref_msgs)), \
+                (name, ndev, "msgs")
+
+# scheduled topology (replicated mode): mesh sizes agree with solo
+sched = topology_sched.compile_schedule(
+    topology_sched.ScheduleSpec(kind="resample_er", period=2),
+    TopologySpec(family="erdos_renyi", n_agents=N, p=0.05, seed=3),
+    representation="sparse")
+ref = None
+for ndev in (None, 1, 8):
+    mesh = None if ndev is None else fleet_shard.build_mesh(ndev)
+    res = fleet_shard.run_sharded_scheduled(
+        state0, sched.init(), reward_fn, cfg, sched, ITERS, mesh)
+    th = np.asarray(jax.device_get(res[0].thetas))
+    if ref is None:
+        ref = th
+    else:
+        assert np.array_equal(th, ref), ("scheduled", ndev)
+
+# checkpoint: saved from an 8-way mesh, restored on one device,
+# bit-for-bit equal to the solo trajectory's state (and back again)
+topo = legs["sparse"][0]
+solo_st = fleet_shard.ShardedNetES(topo, reward_fn, cfg).run(
+    state0, ITERS)[0]
+mesh_st = fleet_shard.ShardedNetES(
+    topo, reward_fn, cfg, mesh=fleet_shard.build_mesh(8)).run(
+    state0, ITERS)[0]
+with tempfile.TemporaryDirectory() as tmp:
+    io.save_pytree(tmp + "/mesh.npz", mesh_st)
+    restored = io.load_pytree(tmp + "/mesh.npz", solo_st)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(solo_st)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "ckpt 8->1"
+    io.save_pytree(tmp + "/solo.npz", solo_st)
+    restored2 = io.load_pytree(tmp + "/solo.npz", mesh_st)
+    for a, b in zip(jax.tree.leaves(restored2),
+                    jax.tree.leaves(mesh_st)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "ckpt 1->8"
+
+print("FLEET_SHARD_MESH_OK")
+"""
+
+
+def test_shard_invariance_on_8_forced_devices():
+    """Meshes {1, 2, 8} reproduce the solo oracle bit-for-bit — state,
+    metrics, traffic counters — for every plan mode, and checkpoints
+    round-trip across shard layouts."""
+    res = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             **{k: v for k, v in __import__("os").environ.items()
+                if k not in ("XLA_FLAGS",)}})
+    assert "FLEET_SHARD_MESH_OK" in res.stdout, \
+        (res.stdout[-2000:], res.stderr[-4000:])
