@@ -42,7 +42,7 @@ def _alignment(cfg, n, seed, family):
     akeys = _agent_keys(jax.random.fold_in(key, 1), n)
     r_pos, r_neg, perts = [], [], []
     for i in range(n):
-        ak = jax.tree.map(lambda a: a[i], akeys)
+        ak = jax.tree.map(lambda a, idx=i: a[idx], akeys)
         pert = perturb_params(p0, ak, sigma, +1.0)
         perts.append(pert)
         r_pos.append(-transformer.loss_fn(pert, cfg, batch))

@@ -59,8 +59,9 @@ def main():
             eval_every=max(1, args.iters // 6), netes=netes_cfg)))
 
     for name, tc in configs:
-        hist = train_rl_netes(args.task, tc,
-                              log=lambda d: print(f"  {name}: {d}"))
+        hist = train_rl_netes(
+            args.task, tc,
+            log=lambda d, name=name: print(f"  {name}: {d}"))
         wire = (f" realized_mb="
                 f"{hist['realized_wire_bytes'] / 2 ** 20:.1f}"
                 if "realized_wire_bytes" in hist else "")

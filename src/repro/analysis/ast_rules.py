@@ -1,0 +1,523 @@
+"""Layer 1: AST rules over the source tree (DESIGN.md §14).
+
+Each rule targets a bug class this repo has actually shipped and fixed:
+
+* ``pallas-literal-index``  — PR 1: literal-int indexing of Pallas refs
+  (interpret-mode NDIndexer rejects partial literal indices).
+* ``weak-scan-carry``       — PR 3: a weak-typed Python scalar in a
+  scan/loop carry initializer comes back strong-typed from the first
+  scan, giving the next same-shape call a new jit signature (one
+  spurious steady-state recompile — worth 10-20× on fleet step time).
+* ``host-sync-in-trace``    — ``float()`` / ``np.asarray`` / ``.item()``
+  / ``jax.device_get`` inside jitted or scan-body code forces a device
+  round-trip per step (the per-step drain bug train/loop.py fixed).
+* ``traced-python-branch``  — Python ``if`` on a traced value raises a
+  TracerBoolConversionError at best and silently retraces at worst;
+  branch on jit-static arguments or use ``lax.cond``/``jnp.where``.
+* ``rng-key-reuse``         — one PRNG key consumed by two samplers
+  without an interleaving ``split``/``fold_in`` correlates the draws.
+
+Rules are pluggable: each is a ``Rule`` subclass registered in
+``RULES``; ``run_rules`` walks files, applies the selected tier, and
+threads findings through the inline-suppression layer
+(``findings.apply_suppressions``). Every rule is heuristic — precision
+is favored over recall, and intentional violations carry inline
+``# repro: allow[rule] -- why`` justifications.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding, apply_suppressions
+
+# --------------------------------------------------------------------------
+# shared AST helpers
+# --------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render ``jax.lax.scan``-style attribute chains; None otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """Leftmost Name of a Name/Attribute/Subscript chain."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_literal_int(node: ast.AST) -> bool:
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        node = node.operand
+    return (isinstance(node, ast.Constant)
+            and type(node.value) is int)
+
+
+_TRACING_CALLEES = {"scan", "fori_loop", "while_loop", "cond", "switch",
+                    "vmap", "pmap", "shard_map", "remat", "checkpoint",
+                    "jit", "associative_scan", "map"}
+
+
+def _jit_static_names(dec: ast.AST) -> Optional[Set[str]]:
+    """If ``dec`` is a jit decorator (possibly through partial), return
+    its static_argnames as a set; None if not a jit decorator."""
+    def is_jit(fn: ast.AST) -> bool:
+        d = dotted(fn)
+        return d is not None and (d == "jit" or d.endswith(".jit"))
+
+    target = None
+    if is_jit(dec):
+        return set()
+    if isinstance(dec, ast.Call):
+        if is_jit(dec.func):
+            target = dec
+        else:
+            d = dotted(dec.func)
+            if (d in ("partial", "functools.partial") and dec.args
+                    and is_jit(dec.args[0])):
+                target = dec
+    if target is None:
+        return None
+    static: Set[str] = set()
+    for kw in target.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            elems = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elems:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    static.add(e.value)
+    return static
+
+
+def collect_traced_functions(
+        tree: ast.AST) -> Dict[ast.FunctionDef, Set[str]]:
+    """Functions whose bodies run under a jax trace: jit-decorated defs
+    (mapped to their jit-static parameter names) and defs passed by name
+    to scan/fori_loop/while_loop/cond/switch/vmap/shard_map/jit calls
+    (every parameter traced). First-level only — calls INTO helpers are
+    not followed (layer 2 sees through them on the jaxpr instead)."""
+    passed: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted(node.func)
+        if d is None or d.split(".")[-1] not in _TRACING_CALLEES:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                passed.add(arg.id)
+    traced: Dict[ast.FunctionDef, Set[str]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            static = _jit_static_names(dec)
+            if static is not None:
+                traced[node] = static
+                break
+        else:
+            if node.name in passed:
+                traced[node] = set()
+    return traced
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+
+
+# --------------------------------------------------------------------------
+# rule framework
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    tier: str          # "standard" runs always; "strict" only under --strict
+    hint: str
+    doc: str
+
+    def check(self, tree: ast.AST, src: str, path: str) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule=self.id, path=path,
+                       line=getattr(node, "lineno", 0),
+                       message=message, hint=self.hint)
+
+
+class PallasLiteralIndex(Rule):
+    """Flag ``ref[0]`` / ``ref[0, :]`` on Pallas ref parameters (names
+    ending ``_ref`` by kernel convention). jax 0.4.37's interpret-mode
+    NDIndexer rejects partial literal-int indices (the 22-test PR 1
+    class). A full all-int scalar index (``flag_ref[0, 0]``) is allowed
+    — that form is NDIndexer-safe and used by the fused kernels."""
+
+    def check(self, tree, src, path):
+        out: List[Finding] = []
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.Lambda)):
+                continue
+            args = fn.args
+            refs = {p.arg for p in
+                    (args.posonlyargs + args.args + args.kwonlyargs)
+                    if p.arg.endswith("_ref") or p.arg.endswith("_refs")}
+            if not refs:
+                continue
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Subscript)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in refs):
+                    continue
+                s = node.slice
+                if _is_literal_int(s):
+                    out.append(self.finding(
+                        path, node,
+                        f"Pallas ref {node.value.id!r} indexed with a "
+                        f"literal int"))
+                elif isinstance(s, ast.Tuple):
+                    lits = any(_is_literal_int(e) for e in s.elts)
+                    slices = any(isinstance(e, ast.Slice)
+                                 or (isinstance(e, ast.Constant)
+                                     and e.value is Ellipsis)
+                                 for e in s.elts)
+                    if lits and slices:
+                        out.append(self.finding(
+                            path, node,
+                            f"Pallas ref {node.value.id!r} partially "
+                            f"indexed with literal ints"))
+        return out
+
+
+class WeakScanCarry(Rule):
+    """Flag bare Python numeric literals in ``lax.scan`` /
+    ``fori_loop`` / ``while_loop`` carry initializers. Literals inside a
+    call (``jnp.zeros((), jnp.int32)``, ``jnp.float32(0)``) are assumed
+    to carry an explicit dtype and pass."""
+
+    _INIT_ARG = {"scan": (1, "init"), "while_loop": (2, "init_val"),
+                 "fori_loop": (3, "init_val")}
+
+    def _literals(self, node: ast.AST) -> Iterable[ast.Constant]:
+        if isinstance(node, ast.Call):
+            return  # dtype-carrying constructor — its literals are fine
+        if (isinstance(node, ast.Constant)
+                and type(node.value) in (int, float, complex, bool)):
+            yield node
+        for child in ast.iter_child_nodes(node):
+            yield from self._literals(child)
+
+    def check(self, tree, src, path):
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d is None:
+                continue
+            leaf = d.split(".")[-1]
+            if leaf not in self._INIT_ARG or "lax" not in d.split("."):
+                continue
+            pos, kwname = self._INIT_ARG[leaf]
+            init = None
+            if len(node.args) > pos:
+                init = node.args[pos]
+            else:
+                for kw in node.keywords:
+                    if kw.arg == kwname:
+                        init = kw.value
+            if init is None:
+                continue
+            for lit in self._literals(init):
+                out.append(self.finding(
+                    path, lit,
+                    f"Python scalar {lit.value!r} in a lax.{leaf} carry "
+                    f"initializer is weak-typed: the first run returns it "
+                    f"strong-typed and the next same-shape call recompiles"))
+        return out
+
+
+_HOST_SYNC_ROOTS = {"np", "numpy", "onp"}
+
+
+class HostSyncInTrace(Rule):
+    """Flag host-synchronizing calls inside traced code: ``float()`` /
+    ``int()`` on one argument, ``np.asarray``/``np.array``,
+    ``.item()``, ``.tolist()``, ``.block_until_ready()`` and
+    ``jax.device_get``. Each forces a device→host transfer per step
+    when it survives into a jitted/scan body."""
+
+    def check(self, tree, src, path):
+        out: List[Finding] = []
+        for fn in collect_traced_functions(tree):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                msg = self._classify(node)
+                if msg:
+                    out.append(self.finding(path, node, msg))
+        return out
+
+    def _classify(self, call: ast.Call) -> Optional[str]:
+        f = call.func
+        if (isinstance(f, ast.Name) and f.id in ("float", "int")
+                and len(call.args) == 1 and not call.keywords):
+            return (f"builtin {f.id}() inside traced code concretizes its "
+                    f"argument (host sync / trace error on tracers)")
+        if isinstance(f, ast.Attribute):
+            root = _root_name(f)
+            if f.attr in ("asarray", "array") and root in _HOST_SYNC_ROOTS:
+                return (f"{root}.{f.attr} inside traced code pulls the "
+                        f"operand to host memory")
+            if f.attr in ("item", "tolist", "block_until_ready") \
+                    and not call.args:
+                return (f".{f.attr}() inside traced code is a device "
+                        f"round-trip per call")
+            if f.attr == "device_get":
+                return "jax.device_get inside traced code is a host sync"
+        return None
+
+
+class TracedPythonBranch(Rule):
+    """Flag Python ``if``/ternaries testing a traced function parameter.
+    ``is``/``is not`` comparisons, ``isinstance`` tests, and parameters
+    named in the jit decorator's ``static_argnames`` are exempt."""
+
+    def check(self, tree, src, path):
+        out: List[Finding] = []
+        for fn, static in collect_traced_functions(tree).items():
+            suspects = set(_param_names(fn)) - static - {"self", "cls"}
+            if not suspects:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.If, ast.IfExp)):
+                    name = self._scan_names(node.test, suspects)
+                    if name:
+                        out.append(self.finding(
+                            path, node,
+                            f"Python branch on traced argument {name!r} "
+                            f"(TracerBoolConversionError, or a silent "
+                            f"retrace per value)"))
+        return out
+
+    def _scan_names(self, test: ast.AST,
+                    suspects: Set[str]) -> Optional[str]:
+        skip: Set[int] = set()
+        for node in ast.walk(test):
+            if isinstance(node, ast.Compare) and all(
+                    isinstance(op, (ast.Is, ast.IsNot))
+                    for op in node.ops):
+                for sub in ast.walk(node):
+                    skip.add(id(sub))
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d in ("isinstance", "callable", "hasattr"):
+                    for sub in ast.walk(node):
+                        skip.add(id(sub))
+        for node in ast.walk(test):
+            if id(node) in skip:
+                continue
+            if isinstance(node, ast.Name) and node.id in suspects:
+                return node.id
+        return None
+
+
+_KEY_PRODUCERS = {"PRNGKey", "split", "fold_in", "key", "wrap_key_data"}
+# fold_in is deliberately NOT a consumer: deriving many children from one
+# parent with distinct data (``fold_in(key, i)`` per iteration/agent) is
+# the intended pattern (es_utils.agent_noise_key). ``split`` IS a
+# consumer — splitting the same key twice replays the same children.
+_KEY_CONSUMERS = {
+    "normal", "uniform", "bernoulli", "randint", "permutation", "choice",
+    "categorical", "gumbel", "exponential", "truncated_normal", "laplace",
+    "cauchy", "logistic", "gamma", "beta", "poisson", "rademacher",
+    "bits", "split", "shuffle", "orthogonal", "dirichlet",
+    "multivariate_normal", "loggamma", "binomial",
+}
+
+
+class RngKeyReuse(Rule):
+    """Flag a PRNG key consumed by two ``jax.random`` calls without an
+    interleaving rebind: the second draw replays the first's stream.
+    Branch-aware (an either/or consume in if/else is one use); loop
+    bodies are simulated twice to catch cross-iteration reuse. Only
+    ``jax.random.*`` consumers count — passing a key to a reward/eval
+    closure twice (common random numbers) is not flagged."""
+
+    def check(self, tree, src, path):
+        out: List[Finding] = []
+        for fn in ast.walk(tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                keys: Set[str] = set()
+                consumed: Set[str] = set()
+                self._sim(fn.body, keys, consumed, out, path)
+        # nested defs are simulated inline AND as standalone scopes —
+        # keep one finding per site
+        seen = set()
+        uniq = []
+        for f in out:
+            k = (f.rule, f.line, f.message)
+            if k not in seen:
+                seen.add(k)
+                uniq.append(f)
+        return uniq
+
+    # -- helpers -----------------------------------------------------------
+    def _is_producer(self, call: ast.Call) -> bool:
+        d = dotted(call.func)
+        if d is None:
+            return False
+        parts = d.split(".")
+        return parts[-1] in _KEY_PRODUCERS and (
+            len(parts) == 1 or "random" in parts or "jr" in parts
+            or "jrandom" in parts)
+
+    def _consume_events(self, node: ast.AST):
+        """(call, key-name) for every bare Name passed to a
+        jax.random consumer anywhere under ``node``."""
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            d = dotted(call.func)
+            if d is None:
+                continue
+            parts = d.split(".")
+            if parts[-1] not in _KEY_CONSUMERS:
+                continue
+            if len(parts) > 1 and "random" not in parts \
+                    and "jr" not in parts and "jrandom" not in parts:
+                continue
+            for arg in list(call.args) + [k.value for k in call.keywords]:
+                if isinstance(arg, ast.Name):
+                    yield call, arg.id
+
+    def _sim(self, stmts: Sequence[ast.stmt], keys: Set[str],
+             consumed: Set[str], out: List[Finding], path: str) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.If,)):
+                self._use(st.test, keys, consumed, out, path)
+                k1, c1 = set(keys), set(consumed)
+                self._sim(st.body, k1, c1, out, path)
+                k2, c2 = set(keys), set(consumed)
+                self._sim(st.orelse, k2, c2, out, path)
+                keys |= k1 | k2
+                consumed |= c1 | c2
+            elif isinstance(st, (ast.For, ast.While)):
+                for _ in range(2):   # second pass: cross-iteration reuse
+                    self._sim(st.body, keys, consumed, out, path)
+                self._sim(st.orelse, keys, consumed, out, path)
+            elif isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                if st.value is not None:
+                    self._use(st.value, keys, consumed, out, path)
+                targets = st.targets if isinstance(st, ast.Assign) \
+                    else [st.target]
+                for t in targets:
+                    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                    produced = (isinstance(st, ast.Assign)
+                                and isinstance(st.value, ast.Call)
+                                and self._is_producer(st.value))
+                    for e in elts:
+                        if isinstance(e, ast.Name):
+                            consumed.discard(e.id)
+                            if produced:
+                                keys.add(e.id)
+                            else:
+                                keys.discard(e.id)
+            elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._sim(st.body, keys, consumed, out, path)
+            elif isinstance(st, (ast.With,)):
+                self._sim(st.body, keys, consumed, out, path)
+            elif isinstance(st, ast.Try):
+                for block in (st.body, st.orelse, st.finalbody):
+                    self._sim(block, keys, consumed, out, path)
+                for h in st.handlers:
+                    self._sim(h.body, keys, consumed, out, path)
+            else:
+                self._use(st, keys, consumed, out, path)
+
+    def _use(self, node: ast.AST, keys: Set[str], consumed: Set[str],
+             out: List[Finding], path: str) -> None:
+        for call, name in self._consume_events(node):
+            if name not in keys:
+                continue
+            if name in consumed:
+                out.append(self.finding(
+                    path, call,
+                    f"PRNG key {name!r} already consumed by an earlier "
+                    f"jax.random call — the streams are identical"))
+            else:
+                consumed.add(name)
+
+
+RULES: Dict[str, Rule] = {r.id: r for r in (
+    PallasLiteralIndex(
+        id="pallas-literal-index", tier="standard",
+        hint="load whole blocks with ref[...] or index with traced "
+             "scalars / pl.dslice",
+        doc="literal-int Pallas ref indexing (PR 1 bug class)"),
+    WeakScanCarry(
+        id="weak-scan-carry", tier="standard",
+        hint="give carry scalars an explicit dtype: "
+             "jnp.zeros((), jnp.float32) / jnp.asarray(x, dtype)",
+        doc="weak-typed Python scalar in a scan carry (PR 3 recompile "
+            "class)"),
+    HostSyncInTrace(
+        id="host-sync-in-trace", tier="standard",
+        hint="drain metrics outside the scan (one host transfer per "
+             "chunk); suppress with a justification if the operand is "
+             "a static Python value",
+        doc="host sync inside jitted / scan-body code"),
+    TracedPythonBranch(
+        id="traced-python-branch", tier="standard",
+        hint="branch with lax.cond / jnp.where, or declare the "
+             "argument in static_argnames",
+        doc="Python-level branch on a traced value"),
+    RngKeyReuse(
+        id="rng-key-reuse", tier="standard",
+        hint="split the key (k1, k2 = jax.random.split(key)) or "
+             "fold_in a distinct constant per consumer",
+        doc="PRNG key passed to two consumers without split/fold_in"),
+)}
+
+
+def run_rules(paths: Iterable[Path], rules: Optional[Sequence[str]] = None,
+              strict: bool = False) -> List[Finding]:
+    """Run the selected AST rules over every ``.py`` file under
+    ``paths`` (files or directories), returning suppression-resolved
+    findings sorted by location."""
+    selected = [RULES[r] for r in rules] if rules else [
+        r for r in RULES.values() if strict or r.tier == "standard"]
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    out: List[Finding] = []
+    for f in files:
+        src = f.read_text()
+        try:
+            tree = ast.parse(src, filename=str(f))
+        except SyntaxError as e:
+            out.append(Finding(rule="syntax-error", path=str(f),
+                               line=e.lineno or 0, message=str(e.msg)))
+            continue
+        per_file: List[Finding] = []
+        for rule in selected:
+            per_file.extend(rule.check(tree, src, str(f)))
+        out.extend(apply_suppressions(per_file, src, str(f)))
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out

@@ -1,0 +1,82 @@
+"""Entry-point registry for the jaxpr contract layer (DESIGN.md §14).
+
+This module is import-leaf (stdlib only): hooked modules import
+``EntryPoint`` from here without creating a cycle, and
+``iter_entry_points`` imports the hooked modules lazily.
+
+Registering a new entry point
+-----------------------------
+Define ``analysis_entry_points()`` in the module that owns the compiled
+program and add the module path to ``HOOKED_MODULES``::
+
+    def analysis_entry_points():
+        from repro.analysis.registry import EntryPoint
+
+        def build():
+            ...  # construct fn + SMALL abstract/concrete args
+            return fn, args, kwargs
+
+        return (EntryPoint(name="mymod.my_step", build=build),)
+
+``build`` must be cheap: it is traced via ``jax.make_jaxpr``, never
+executed. ``min_devices`` gates entry points whose program structure
+only exists on a mesh (halo rounds, rotating ppermute chains) — the CI
+``static-analysis`` job runs under a simulated 8-device host so those
+are checked there and by the tier-1 subprocess leg.
+
+Contracts (see ``contracts.py``):
+
+* ``no-host-callback``          — nothing in the jaxpr calls back to host
+* ``strong-scan-carry``         — no weak-typed scan/while carry avals
+* ``branch-collective-parity``  — cond/switch branches issue the same
+  collective sequence (deadlock freedom under a replicated branch index)
+* ``fma-seam-barrier``          — precise: no rank≥2 mul result feeds an
+  add/sub unguarded (apply only to seam leaf fns — element-wise math
+  like erfinv in jax.random makes it meaningless on whole steps)
+* ``min_barriers``              — ratchet: the traced program must keep
+  at least this many ``optimization_barrier`` eqns (dropping one is the
+  PR 7 bit-parity regression; raising the count is always fine)
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, List, Tuple
+
+DEFAULT_CONTRACTS: Tuple[str, ...] = (
+    "no-host-callback", "strong-scan-carry", "branch-collective-parity")
+
+HOOKED_MODULES: Tuple[str, ...] = (
+    "repro.core.netes",
+    "repro.distributed.netes_dist",
+    "repro.distributed.fleet_shard",
+    "repro.distributed.permute_mixing",
+    "repro.kernels.netes_fused_mixing",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str                                   # "module.entry" display id
+    build: Callable[[], tuple]                  # () -> (fn, args, kwargs)
+    contracts: Tuple[str, ...] = DEFAULT_CONTRACTS
+    min_barriers: int = 0                       # 0 = no barrier ratchet
+    min_devices: int = 1                        # skip below this count
+
+
+def iter_entry_points() -> List[EntryPoint]:
+    """Collect every hooked module's entry points. Import errors are not
+    swallowed: a hooked module that stops importing is itself a finding
+    the CLI surfaces (the registry must always be traceable)."""
+    eps: List[EntryPoint] = []
+    seen: Dict[str, str] = {}
+    for modname in HOOKED_MODULES:
+        mod = importlib.import_module(modname)
+        for ep in mod.analysis_entry_points():
+            if ep.name in seen:
+                raise ValueError(
+                    f"duplicate entry point {ep.name!r} "
+                    f"({seen[ep.name]} and {modname})")
+            seen[ep.name] = modname
+            eps.append(ep)
+    return eps

@@ -471,7 +471,7 @@ def _event_select(x: Any, last: Any, threshold: float):
     n = leaves[0].shape[0]
     sq = jnp.zeros((n,), jnp.float32)
     dims = 0
-    for l_new, l_old in zip(leaves, jax.tree.leaves(last)):
+    for l_new, l_old in zip(leaves, jax.tree.leaves(last), strict=True):
         d = l_new.astype(jnp.float32) - l_old.astype(jnp.float32)
         sq = sq + (d.reshape(n, -1) ** 2).sum(axis=1)
         dims += int(l_new.size // n)

@@ -390,3 +390,57 @@ def es_step(theta: jax.Array, key: jax.Array, reward_fn: Callable,
     update = es_utils.apply_weight_decay(theta, update, cfg.weight_decay)
     metrics = {"reward_mean": rewards.mean(), "reward_max": rewards.max()}
     return theta + update, key, metrics
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registry hook (repro.analysis — DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def analysis_entry_points():
+    """Contract-linter entry points: the compiled run drivers this module
+    owns, traced at toy size (N=8, D=16). ``build`` closures construct
+    fresh operands each call; nothing here executes — the linter only
+    traces via ``jax.make_jaxpr``."""
+    from repro.analysis.registry import EntryPoint
+
+    def _reward(params, key):
+        return -jnp.sum(params * params, axis=-1)
+
+    def _toy_state(n=8, d=16):
+        return init_state(jax.random.PRNGKey(0), n, d)
+
+    def _toy_adj(n=8):
+        from repro.core.topology import TopologySpec
+        return jnp.asarray(TopologySpec(family="erdos_renyi", n_agents=n,
+                                        p=0.5, seed=0).build())
+
+    def build_run():
+        cfg = NetESConfig()
+        return (lambda s, a: _run_jit(s, a, _reward, cfg, 3),
+                (_toy_state(), _toy_adj()), {})
+
+    def build_run_q8():
+        from repro.comm.channel import compile_channel
+        cfg = NetESConfig()
+        chan = compile_channel("quantize(bits=8)", 8)
+        state = _toy_state()
+        cs = chan.init(state.thetas)
+        return (lambda s, a, c: _run_jit(s, a, _reward, cfg, 3, chan, c),
+                (state, _toy_adj(), cs), {})
+
+    def build_run_scheduled():
+        from repro.core.topology import TopologySpec
+        from repro.core.topology_sched import ScheduleSpec, compile_schedule
+        cfg = NetESConfig()
+        base = TopologySpec(family="erdos_renyi", n_agents=8, p=0.5, seed=0)
+        schedule = compile_schedule(ScheduleSpec(kind="resample_er",
+                                                 period=2), base)
+        return (lambda s, t: _run_scheduled_jit(s, t, _reward, cfg,
+                                                schedule, 3),
+                (_toy_state(), schedule.init()), {})
+
+    return (
+        EntryPoint(name="netes.run", build=build_run),
+        EntryPoint(name="netes.run.q8", build=build_run_q8),
+        EntryPoint(name="netes.run_scheduled", build=build_run_scheduled),
+    )

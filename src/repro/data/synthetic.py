@@ -21,11 +21,11 @@ from repro.models import frontends
 def _markov_tokens(key: jax.Array, batch: int, seq: int, vocab: int):
     """Tokens with short-range structure: x_{t} depends on x_{t−1} via a
     seeded random permutation with noise, plus periodic copy segments."""
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
     perm = jax.random.permutation(k1, vocab)
     x0 = jax.random.randint(k2, (batch,), 0, vocab)
     noise = jax.random.bernoulli(k3, 0.15, (batch, seq))
-    rand = jax.random.randint(k3, (batch, seq), 0, vocab)
+    rand = jax.random.randint(k4, (batch, seq), 0, vocab)
 
     def step(x, inp):
         nz, rd = inp

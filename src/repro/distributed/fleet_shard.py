@@ -786,3 +786,78 @@ def run_sharded_scheduled(state: NetESState, sched_state,
     eng = _get_engine(None, reward_fn, cfg, mesh, channel, schedule)
     return eng.run(state, num_iters, chan_state=chan_state,
                    sched_state=sched_state)
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registry hook (repro.analysis — DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+# Barrier ratchet for the engine step (per traced program, num_iters=2 →
+# one scan body): σ·ε pin + (mixed, wsum) pair + wsum·θ + scale·mixed +
+# the two weight-decay pins, plus the per-slot pins inside the
+# _dense_contract loop (4-unrolled fori body). Measured by
+# tests/test_analysis_contracts.py; raising the count is always fine,
+# dropping below it is the PR 7 bit-parity regression.
+_STEP_MIN_BARRIERS = 10
+
+
+def analysis_entry_points():
+    """Contract-linter entry points: the sharded engine's compiled step
+    (solo + mesh variants, barrier-ratcheted) and the two seam leaf
+    contractions under the PRECISE fma-seam contract — every product in
+    them must be barrier-pinned before accumulation."""
+    from repro.analysis.registry import EntryPoint
+
+    def _reward(params, key):
+        return -jnp.sum(params * params, axis=-1)
+
+    def _toy_topo(n=8):
+        from repro.core import topology
+        return topology_repr.as_topology(
+            jnp.asarray(topology.erdos_renyi(n, p=0.5, seed=0)))
+
+    def _engine_args(eng, d=16):
+        th = jnp.zeros((eng.plan.n_pad, d), jnp.float32)
+        return (th, jax.random.PRNGKey(0), jnp.zeros((), jnp.int32),
+                jnp.full((), -jnp.inf, jnp.float32), th[0],
+                eng._operands, (), ())
+
+    def build_solo_step():
+        eng = ShardedNetES(_toy_topo(), _reward, NetESConfig(), mesh=None)
+        run_impl = eng._make_run_impl()
+        return (lambda *a: run_impl(*a, 2), _engine_args(eng), {})
+
+    def build_sharded_step():
+        eng = ShardedNetES(_toy_topo(), _reward, NetESConfig(),
+                           mesh=build_mesh())
+        run_impl = eng._make_run_impl()
+        return (lambda *a: run_impl(*a, 2), _engine_args(eng), {})
+
+    def build_slot_contract():
+        idx = jnp.zeros((4, 6), jnp.int32)
+        w = jnp.ones((4, 6), jnp.float32)
+        values = jnp.ones((8, 16), jnp.float32)
+        return _slot_contract, (idx, w, values), {}
+
+    def build_dense_contract():
+        adjb = jnp.ones((4, 8), jnp.float32)
+        coeff = jnp.ones((8,), jnp.float32)
+        values = jnp.ones((8, 16), jnp.float32)
+        return _dense_contract, (adjb, coeff, values), {}
+
+    seam = ("no-host-callback", "fma-seam-barrier")
+    return (
+        EntryPoint(name="fleet_shard.solo_step", build=build_solo_step,
+                   min_barriers=_STEP_MIN_BARRIERS),
+        EntryPoint(name="fleet_shard.sharded_step",
+                   build=build_sharded_step, min_devices=2,
+                   min_barriers=_STEP_MIN_BARRIERS),
+        # ratchets measured on the toy shapes above: slot loop = 4-unroll
+        # fori body + 2 tail slots, dense loop = 4-unroll fori body
+        EntryPoint(name="fleet_shard.slot_contract",
+                   build=build_slot_contract, contracts=seam,
+                   min_barriers=6),
+        EntryPoint(name="fleet_shard.dense_contract",
+                   build=build_dense_contract, contracts=seam,
+                   min_barriers=4),
+    )

@@ -81,7 +81,7 @@ def perturb_params(params: Any, agent_key: jax.Array, sigma: float,
     leaves, treedef = jax.tree.flatten(params)
     keys = _leaf_keys(agent_key, len(leaves))
     out = [_perturb_leaf(leaf, k, sigma, sign)
-           for leaf, k in zip(leaves, keys)]
+           for leaf, k in zip(leaves, keys, strict=True)]
     return jax.tree.unflatten(treedef, out)
 
 
@@ -597,3 +597,56 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
         return transformer.decode_step(params, cfg, token, cache, pos)
 
     return decode
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registry hook (repro.analysis — DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def analysis_entry_points():
+    """Contract-linter entry points: both distributed step flavors over a
+    nano transformer (1 layer, d_model 64) — big enough that the traced
+    jaxpr contains the real perturb/eval/mix structure, small enough to
+    trace in well under a second."""
+    from repro.analysis.registry import EntryPoint
+
+    def _nano_cfg():
+        import dataclasses
+
+        from repro.configs import get_config
+        return dataclasses.replace(
+            get_config("mistral-nemo-12b-smoke"), name="analysis-nano",
+            num_layers=1, d_model=64, num_heads=2, num_kv_heads=2,
+            head_dim=32, d_ff=128, vocab_size=128)
+
+    def _operands(n=4):
+        from repro.core import topology
+        from repro.data import make_batch
+        cfg = _nano_cfg()
+        key = jax.random.PRNGKey(0)
+        adj = jnp.asarray(topology.erdos_renyi(n, p=0.5, seed=0))
+        batch = make_batch(cfg, dict(seq_len=64, global_batch=n), key)
+        batch_g = jax.tree.map(lambda x: x.reshape((n, 1) + x.shape[1:]),
+                               batch)
+        p0 = transformer.init_params(key, cfg)
+        ncfg = NetESConfig(alpha=1e-3, sigma=0.01)
+        return cfg, ncfg, adj, batch_g, p0, key
+
+    def build_replica():
+        n = 4
+        cfg, ncfg, adj, batch_g, p0, key = _operands(n)
+        step = make_replica_train_step(cfg, ncfg, n, microbatch=1)
+        p = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (n,) + leaf.shape), p0)
+        return step, (p, adj, batch_g, key), {}
+
+    def build_consensus():
+        n = 4
+        cfg, ncfg, adj, batch_g, p0, key = _operands(n)
+        step = make_consensus_train_step(cfg, ncfg, n)
+        return step, (p0, adj, batch_g, key), {}
+
+    return (
+        EntryPoint(name="netes_dist.replica_step", build=build_replica),
+        EntryPoint(name="netes_dist.consensus_step", build=build_consensus),
+    )

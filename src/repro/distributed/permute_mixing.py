@@ -230,3 +230,44 @@ def make_rotating_permute_mixing(mesh: Mesh, axis: str,
     return shard_map(local_mix, mesh=mesh,
                      in_specs=(P(None, None), P(axis, None), P()),
                      out_specs=P(axis, None))
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registry hook (repro.analysis — DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def analysis_entry_points():
+    """Contract-linter entry points for the collective-permute mixing
+    backends. The rotating variant is the repo's only ``lax.switch`` over
+    ppermute chains — the branch-collective-parity contract (deadlock
+    freedom under the replicated phase index) is checked on a real
+    multi-branch switch, which needs n ≥ 5 devices for cycle > 1 (the CI
+    static-analysis job forces an 8-device host platform)."""
+    from repro.analysis.registry import EntryPoint
+
+    def _mesh():
+        from repro.distributed.fleet_shard import build_mesh
+        return build_mesh()
+
+    def _mix_args(n, d=16):
+        return (jnp.ones((n, n), jnp.float32), jnp.ones((n, d),
+                                                        jnp.float32))
+
+    def build_static_chain():
+        mesh = _mesh()
+        n = mesh.shape["agents"]
+        fn = make_permute_mixing(mesh, "agents", (1,))
+        return fn, _mix_args(n), {}
+
+    def build_rotating_switch():
+        mesh = _mesh()
+        n = mesh.shape["agents"]
+        fn = make_rotating_permute_mixing(mesh, "agents", (1, 2), stride=1)
+        return fn, _mix_args(n) + (jnp.zeros((), jnp.int32),), {}
+
+    return (
+        EntryPoint(name="permute_mixing.static_chain",
+                   build=build_static_chain, min_devices=2),
+        EntryPoint(name="permute_mixing.rotating_switch",
+                   build=build_rotating_switch, min_devices=5),
+    )

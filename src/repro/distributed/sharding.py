@@ -201,7 +201,7 @@ def guard_divisibility(spec: P, shape, mesh: Mesh) -> P:
     51865 vocab over a 16-wide model axis ⇒ replicate that dim)."""
     parts = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
     out = []
-    for d, axp in zip(shape, parts):
+    for d, axp in zip(shape, parts, strict=False):
         if axp is None:
             out.append(None)
             continue

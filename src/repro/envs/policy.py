@@ -22,7 +22,7 @@ class MLPPolicy:
     def layer_shapes(self):
         dims = (self.obs_dim,) + self.hidden + (self.act_dim,)
         shapes = []
-        for din, dout in zip(dims[:-1], dims[1:]):
+        for din, dout in zip(dims[:-1], dims[1:], strict=True):
             shapes.append((din, dout))
             shapes.append((dout,))
         return shapes

@@ -11,6 +11,7 @@ from functools import partial
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 
 from .policy import MLPPolicy
 
@@ -28,7 +29,10 @@ def episode_return(env, policy: MLPPolicy, theta: jax.Array,
         return (state, total + reward), None
 
     keys = jax.random.split(k_steps, env.episode_len)
-    (final_state, total), _ = jax.lax.scan(body, (state0, 0.0), keys)
+    # strong-typed return accumulator: a weak 0.0 carry re-keys the jit
+    # signature once the first scan hands back a strong f32 (PR 3 class)
+    total0 = jnp.zeros((), jnp.float32)
+    (final_state, total), _ = jax.lax.scan(body, (state0, total0), keys)
     del final_state
     return total
 

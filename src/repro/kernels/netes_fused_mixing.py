@@ -225,3 +225,48 @@ def fused_broadcast_select(codes: jax.Array, scale: jax.Array,
         interpret=_resolve_interpret(interpret),
     )(flag, scale.reshape(1, 1).astype(jnp.float32), codes_p, thetas_p)
     return out[:, :d]
+
+
+# ---------------------------------------------------------------------------
+# static-analysis registry hook (repro.analysis — DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def analysis_entry_points():
+    """Contract-linter entry points for both fused wire kernels, pallas
+    (interpret) and XLA lowerings. Deliberately NOT under the fma-seam
+    contract: the XLA slot loop's unguarded mul→add is shape-uniform by
+    construction (the whole (N, D) slab lives in one program), so FMA
+    contraction cannot break cross-shard parity here."""
+    from repro.analysis.registry import EntryPoint
+
+    def _wire_args(n=8, k=4, d=16):
+        return (jnp.zeros((n, k), jnp.int32),      # neighbor_idx
+                jnp.ones((n, k), jnp.float32),     # neighbor_mask
+                jnp.ones((n,), jnp.float32),       # coeff
+                jnp.zeros((n, d), jnp.int8),       # codes
+                jnp.ones((n, 1), jnp.float32))     # scale
+
+    def _build_neighbor_sum(backend):
+        def build():
+            fn = functools.partial(fused_neighbor_sum,
+                                   out_dtype=jnp.float32,
+                                   interpret=True, backend=backend)
+            return fn, _wire_args(), {}
+        return build
+
+    def build_broadcast_select():
+        d, n = 16, 8
+        fn = functools.partial(fused_broadcast_select, interpret=True,
+                               backend="pallas")
+        args = (jnp.zeros((d,), jnp.int8), jnp.ones((1,), jnp.float32),
+                jnp.array(True), jnp.ones((n, d), jnp.float32))
+        return fn, args, {}
+
+    return (
+        EntryPoint(name="kernels.fused_neighbor_sum",
+                   build=_build_neighbor_sum("pallas")),
+        EntryPoint(name="kernels.fused_neighbor_sum.xla",
+                   build=_build_neighbor_sum("xla")),
+        EntryPoint(name="kernels.fused_broadcast_select",
+                   build=build_broadcast_select),
+    )

@@ -419,7 +419,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Dict,
     new_cache = dict(cache)
     li = 0
     new_head = []
-    for p, c in zip(params["layers_head"], cache["head"]):
+    for p, c in zip(params["layers_head"], cache["head"], strict=True):
         x, cnew = _decode_layer(p, cfg, specs[li], x, c, pos, enc_out, enc_pos)
         new_head.append(cnew)
         li += 1
@@ -442,7 +442,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array, cache: Dict,
         new_cache["scan"] = list(new_scan)
         li += n_rep * period
     new_tail = []
-    for p, c in zip(params["layers_tail"], cache["tail"]):
+    for p, c in zip(params["layers_tail"], cache["tail"], strict=True):
         x, cnew = _decode_layer(p, cfg, specs[li], x, c, pos, enc_out, enc_pos)
         new_tail.append(cnew)
         li += 1
@@ -508,7 +508,7 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         new_cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
     li = 0
     new_head = []
-    for p, c in zip(params["layers_head"], cache["head"]):
+    for p, c in zip(params["layers_head"], cache["head"], strict=True):
         x, cnew = _prefill_layer(p, cfg, specs[li], x, c, positions,
                                  enc_out, enc_pos)
         new_head.append(cnew)
@@ -533,7 +533,7 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         new_cache["scan"] = list(new_scan)
         li += n_rep * period
     new_tail = []
-    for p, c in zip(params["layers_tail"], cache["tail"]):
+    for p, c in zip(params["layers_tail"], cache["tail"], strict=True):
         x, cnew = _prefill_layer(p, cfg, specs[li], x, c, positions,
                                  enc_out, enc_pos)
         new_tail.append(cnew)

@@ -356,13 +356,18 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
             cfg, tc.netes, n, agent_axis_names=("data",), microbatch=1,
             topology=build_topology(tc), channel=channel)
     step = jax.jit(step)
+    # dedicated init subkey: init_params(key) / split(key, n) followed by
+    # the loop's split(key, 3) reuses the SAME parent — threefry children
+    # coincide (split(key, 3) == split(key, n)[:3]), correlating the
+    # first iterations' batch/step draws with the init draws.
+    key, k_init = jax.random.split(key)
     if same_init:
-        p0 = transformer.init_params(key, cfg)
+        p0 = transformer.init_params(k_init, cfg)
         params = jax.tree.map(
             lambda l: jnp.broadcast_to(l, (n,) + l.shape).copy(), p0)
     else:
         params = jax.vmap(lambda k: transformer.init_params(k, cfg))(
-            jax.random.split(key, n))
+            jax.random.split(k_init, n))
     cstate = channel.init(params) if channel is not None else None
     history: Dict[str, List] = {"loss_mean": [], "reward_max": []}
 
@@ -373,7 +378,7 @@ def train_lm_netes(cfg: ModelConfig, tc: TrainConfig, seq_len: int = 128,
 
     def drain():
         for it, mv in zip([i for i, _ in pending],
-                          jax.device_get([m for _, m in pending])):
+                          jax.device_get([m for _, m in pending]), strict=True):
             history["loss_mean"].append(float(mv["loss_mean"]))
             history["reward_max"].append(float(mv["reward_max"]))
             if log and it % 10 == 0:

@@ -1,0 +1,9 @@
+"""Seeded violation: host-sync-in-trace (the per-step drain bug)."""
+import jax
+
+
+@jax.jit
+def step(theta, metric):
+    update = theta * 0.9
+    loss = float(metric)           # BAD: host sync inside a jitted body
+    return update, loss

@@ -1,0 +1,7 @@
+"""Seeded violation: pallas-literal-index (PR 1 bug class)."""
+
+
+def scale_kernel(x_ref, s_ref, o_ref):
+    row = x_ref[0]                 # BAD: bare literal-int ref index
+    head = s_ref[0, :]             # BAD: literal int mixed with a slice
+    o_ref[...] = row * head

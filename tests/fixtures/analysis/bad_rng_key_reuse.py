@@ -1,0 +1,9 @@
+"""Seeded violation: rng-key-reuse."""
+import jax
+
+
+def sample(dim):
+    key = jax.random.PRNGKey(0)
+    eps = jax.random.normal(key, (dim,))
+    mask = jax.random.bernoulli(key, 0.5, (dim,))   # BAD: same stream
+    return eps * mask

@@ -1,0 +1,9 @@
+"""Seeded violation: traced-python-branch."""
+import jax
+
+
+@jax.jit
+def clamp(x, limit):
+    if limit > 0:                  # BAD: Python branch on a traced arg
+        return x.clip(-limit, limit)
+    return x

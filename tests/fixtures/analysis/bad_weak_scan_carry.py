@@ -1,0 +1,11 @@
+"""Seeded violation: weak-scan-carry (PR 3 recompile class)."""
+import jax
+
+
+def total_reward(rewards):
+    def body(acc, r):
+        return acc + r, None
+
+    # BAD: weak-typed Python 0.0 in the carry initializer
+    total, _ = jax.lax.scan(body, 0.0, rewards)
+    return total

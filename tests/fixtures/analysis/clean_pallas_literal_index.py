@@ -1,0 +1,7 @@
+"""Clean counterpart: NDIndexer-safe Pallas ref access patterns."""
+
+
+def scale_kernel(x_ref, flag_ref, o_ref):
+    block = x_ref[...]             # whole-block load
+    flag = flag_ref[0, 0]          # full all-int scalar index is safe
+    o_ref[...] = block * flag

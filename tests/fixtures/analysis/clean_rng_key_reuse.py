@@ -1,0 +1,17 @@
+"""Clean counterpart: split per consumer, fold_in per derived stream."""
+import jax
+
+
+def sample(dim):
+    key = jax.random.PRNGKey(0)
+    k_eps, k_mask = jax.random.split(key)
+    eps = jax.random.normal(k_eps, (dim,))
+    mask = jax.random.bernoulli(k_mask, 0.5, (dim,))
+    return eps * mask
+
+
+def per_agent(key, n, dim):
+    # fold_in derivation from one parent with distinct data is the
+    # intended pattern — one child stream per agent.
+    return [jax.random.normal(jax.random.fold_in(key, i), (dim,))
+            for i in range(n)]

@@ -1,0 +1,12 @@
+"""Clean counterpart: branch on jit-statics or stay on device."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def clamp(x, limit, mode):
+    if mode == "hard":             # fine: mode is static_argnames
+        return jnp.clip(x, -limit, limit)
+    return jnp.where(limit > 0, jnp.tanh(x / limit) * limit, x)

@@ -1,0 +1,11 @@
+"""Clean counterpart: carry initializers with explicit dtypes."""
+import jax
+import jax.numpy as jnp
+
+
+def total_reward(rewards):
+    def body(acc, r):
+        return acc + r, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), rewards)
+    return total

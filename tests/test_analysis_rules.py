@@ -1,0 +1,116 @@
+"""Layer-1 (AST) linter: every rule fires on exactly its seeded-violation
+fixture, stays silent on the clean twin and on the real kernels, and the
+inline-suppression syntax works end to end (tier-1)."""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.ast_rules import RULES, run_rules
+from repro.analysis.findings import scan_suppressions
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+
+RULE_IDS = sorted(RULES)
+
+
+def _slug(rule_id: str) -> str:
+    return rule_id.replace("-", "_")
+
+
+def test_every_rule_has_fixture_pair():
+    for rid in RULE_IDS:
+        assert (FIXTURES / f"bad_{_slug(rid)}.py").is_file(), rid
+        assert (FIXTURES / f"clean_{_slug(rid)}.py").is_file(), rid
+
+
+@pytest.mark.parametrize("rule_id", RULE_IDS)
+def test_rule_fires_on_its_bad_fixture_only(rule_id):
+    """The bad fixture trips its own rule (all rules enabled, so any
+    cross-rule noise would show up here as a foreign rule id)."""
+    findings = run_rules([FIXTURES / f"bad_{_slug(rule_id)}.py"])
+    assert findings, f"{rule_id} silent on its seeded violation"
+    assert {f.rule for f in findings} == {rule_id}, findings
+    for f in findings:
+        assert not f.suppressed
+        assert f.line > 0
+        assert f.hint
+
+
+@pytest.mark.parametrize("rule_id", RULE_IDS)
+def test_all_rules_silent_on_clean_fixture(rule_id):
+    findings = run_rules([FIXTURES / f"clean_{_slug(rule_id)}.py"])
+    assert findings == [], findings
+
+
+def test_rules_silent_on_shipped_kernels():
+    """The real Pallas kernels are the precision bar: zero findings on
+    src/repro/kernels (its ``flag_ref[0, 0]`` full-int index included)."""
+    findings = run_rules([REPO / "src" / "repro" / "kernels"])
+    assert [f for f in findings if not f.suppressed] == [], findings
+
+
+def test_finding_render_carries_location_rule_and_hint():
+    f = run_rules([FIXTURES / "bad_rng_key_reuse.py"])[0]
+    text = f.render()
+    assert "bad_rng_key_reuse.py" in text
+    assert f"{f.line}" in text
+    assert "rng-key-reuse" in text
+
+
+def test_inline_suppression_with_justification(tmp_path):
+    src = (
+        "import jax\n"
+        "\n"
+        "def sample(dim):\n"
+        "    key = jax.random.PRNGKey(0)\n"
+        "    eps = jax.random.normal(key, (dim,))\n"
+        "    # repro: allow[rng-key-reuse] -- fixture: deliberate replay\n"
+        "    mask = jax.random.bernoulli(key, 0.5, (dim,))\n"
+        "    return eps * mask\n")
+    p = tmp_path / "suppressed.py"
+    p.write_text(src)
+    findings = run_rules([p])
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "rng-key-reuse"
+    assert f.suppressed
+    assert f.justification == "fixture: deliberate replay"
+
+
+def test_bare_suppression_is_itself_a_finding(tmp_path):
+    p = tmp_path / "bare.py"
+    p.write_text("x = 1  # repro: allow[rng-key-reuse]\n")
+    findings = run_rules([p])
+    assert [f.rule for f in findings] == ["bare-suppression"]
+    assert not findings[0].suppressed
+
+
+def test_wildcard_suppression_covers_any_rule(tmp_path):
+    src = (
+        "import jax\n"
+        "\n"
+        "@jax.jit\n"
+        "def step(m):\n"
+        "    # repro: allow[*] -- fixture: sync is intentional here\n"
+        "    return float(m)\n")
+    p = tmp_path / "wild.py"
+    p.write_text(src)
+    findings = run_rules([p])
+    assert len(findings) == 1
+    assert findings[0].rule == "host-sync-in-trace"
+    assert findings[0].suppressed
+
+
+def test_scan_suppressions_maps_lines():
+    allow, bare = scan_suppressions(
+        "a = 1\n"
+        "b = 2  # repro: allow[weak-scan-carry] -- why not\n")
+    assert 2 in allow
+    assert bare == []
+
+
+def test_rule_selection_by_id():
+    findings = run_rules([FIXTURES / "bad_rng_key_reuse.py"],
+                         rules=["weak-scan-carry"])
+    assert findings == []

@@ -56,13 +56,13 @@ def test_smoke_netes_train_step(arch):
     adj = jnp.asarray(topology.erdos_renyi(n_agents, p=0.6, seed=0))
     new_params, metrics = step(params, adj, batch, key)
     for leaf, new_leaf in zip(jax.tree.leaves(params),
-                              jax.tree.leaves(new_params)):
+                              jax.tree.leaves(new_params), strict=True):
         assert leaf.shape == new_leaf.shape
         assert bool(jnp.isfinite(new_leaf).all()), arch
     assert np.isfinite(float(metrics["loss_mean"]))
     # params actually moved
     moved = max(float(jnp.abs(a - b).max()) for a, b in
-                zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+                zip(jax.tree.leaves(params), jax.tree.leaves(new_params), strict=True))
     assert moved > 0.0
 
 

@@ -338,7 +338,7 @@ def test_replica_step_lossless_parity_and_lossy_runs():
     chan_step = jax.jit(netes_dist.make_replica_train_step(
         cfg, CFG, n, microbatch=1, topology=topo, channel=ch))
     p_ch, m_ch, cs = chan_step(params, None, batch, key, ch.init(params))
-    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_ch)):
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_ch), strict=True):
         assert np.array_equal(np.asarray(a), np.asarray(b))
     assert float(m_ch["loss_mean"]) == float(m_ref["loss_mean"])
 

@@ -96,6 +96,6 @@ def test_train_state_roundtrip_with_schedule_state(tmp_path):
     save_train_state(tmp_path / "c", 3, blob)
     step, restored = restore_train_state(tmp_path / "c", blob)
     assert step == 3
-    for a, b in zip(jax.tree.leaves(blob), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(blob), jax.tree.leaves(restored), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         assert np.asarray(a).dtype == np.asarray(b).dtype

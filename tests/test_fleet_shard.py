@@ -141,7 +141,7 @@ def test_checkpoint_roundtrip_solo(tmp_path):
     st, _ = eng.run(state0, 2)
     io.save_pytree(tmp_path / "st.npz", st)
     back = io.load_pytree(tmp_path / "st.npz", st)
-    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back), strict=True):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -240,7 +240,7 @@ def test_apply_wire_decodes_to_apply(spec, seed):
                                       np.asarray(w_mask))
     np.testing.assert_array_equal(np.asarray(info["msgs"]),
                                   np.asarray(w_info["msgs"]))
-    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(w_s1)):
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(w_s1), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -399,6 +399,6 @@ def test_replica_step_fused_matches_unfused():
         p1, m, cs = step(params, None, batch, key, ch.init(params))
         outs[fused] = (p1, float(cs.msgs))
     for a, b in zip(jax.tree.leaves(outs[True][0]),
-                    jax.tree.leaves(outs[False][0])):
+                    jax.tree.leaves(outs[False][0]), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert outs[True][1] == outs[False][1]

@@ -42,7 +42,7 @@ def test_stack_unstack_dense_roundtrip():
     stacked = topology_repr.stack(topos)
     assert stacked.adj.shape == (3, 12, 12)
     assert stacked.deg.shape == (3, 12)
-    for orig, back in zip(topos, topology_repr.unstack(stacked)):
+    for orig, back in zip(topos, topology_repr.unstack(stacked), strict=True):
         assert np.array_equal(orig.adj, back.adj)
         assert np.array_equal(orig.deg, back.deg)
 
@@ -54,7 +54,7 @@ def test_stack_sparse_shared_kmax_preserves_graph():
     k_shared = max(t.k_max for t in topos)
     stacked = topology_repr.stack(topos)
     assert stacked.neighbor_idx.shape == (3, 16, k_shared)
-    for adj, back in zip(adjs, topology_repr.unstack(stacked)):
+    for adj, back in zip(adjs, topology_repr.unstack(stacked), strict=True):
         assert back.k_max == k_shared
         assert np.array_equal(np.asarray(back.to_dense()), adj)
     # explicit k_max floor widens further
@@ -111,11 +111,11 @@ def test_vmapped_round_parity(rep):
         jnp.stack(ekeys), reward_fn=reward_fn, cfg=CFG,
         num_iters=iters, eval_episodes=episodes)
 
-    for i, (state, topo, ek) in enumerate(zip(states, topos, ekeys)):
+    for i, (state, topo, ek) in enumerate(zip(states, topos, ekeys, strict=True)):
         ref_state, _m = netes.run(state, topo, reward_fn, CFG, iters)
         ref_score = _eval_score(ref_state, ek, reward_fn, episodes)
         got = _tree_index(new_states, i)
-        for a, b in zip(jax.tree.leaves(ref_state), jax.tree.leaves(got)):
+        for a, b in zip(jax.tree.leaves(ref_state), jax.tree.leaves(got), strict=True):
             assert np.array_equal(np.asarray(a), np.asarray(b))
         assert np.array_equal(np.asarray(ref_score),
                               np.asarray(scores[i]))
@@ -151,7 +151,7 @@ def test_vmapped_scheduled_round_parity():
             iters)
         for a, b in zip(jax.tree.leaves((ref_state, ref_ss)),
                         jax.tree.leaves((_tree_index(new_states, i),
-                                         _tree_index(new_ss, i)))):
+                                         _tree_index(new_ss, i))), strict=True):
             assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -204,7 +204,7 @@ def test_successive_halving_deterministic_and_shrinking():
     assert len(r1.history[-1]["survivors"]) == 1
     # budget widening: each round doubles per-candidate iterations
     iters = [h["iters"] for h in r1.history]
-    assert all(b == 2 * a for a, b in zip(iters, iters[1:]))
+    assert all(b == 2 * a for a, b in zip(iters, iters[1:], strict=False))
     # every candidate carries a label in round 0; winner is among pool
     assert r1.winner in r1.pool
     assert "fully_connected" in r1.control_scores

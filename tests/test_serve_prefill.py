@@ -78,7 +78,7 @@ def test_prefill_matches_decode_warm(arch):
     flat_p = jax.tree_util.tree_leaves_with_path(cache_p)
     flat_d = jax.tree_util.tree_leaves_with_path(cache_d)
     assert len(flat_p) == len(flat_d)
-    for (path_p, leaf_p), (_path_d, leaf_d) in zip(flat_p, flat_d):
+    for (path_p, leaf_p), (_path_d, leaf_d) in zip(flat_p, flat_d, strict=True):
         np.testing.assert_allclose(
             np.asarray(leaf_p), np.asarray(leaf_d), rtol=2e-4, atol=2e-4,
             err_msg=jax.tree_util.keystr(path_p))

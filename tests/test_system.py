@@ -54,7 +54,7 @@ def test_lm_es_estimate_aligns_with_gradient():
     sigma = 0.02
     r_pos, r_neg, perts = [], [], []
     for i in range(n):
-        ak = jax.tree.map(lambda a: a[i], akeys)
+        ak = jax.tree.map(lambda a, idx=i: a[idx], akeys)
         pert = perturb_params(p0, ak, sigma, +1.0)
         perts.append(pert)
         r_pos.append(-transformer.loss_fn(pert, cfg, batch))
@@ -137,7 +137,7 @@ def test_checkpoint_roundtrip(tmp_path):
             "b": [jnp.ones((4,), jnp.int32), {"c": jnp.zeros((2, 2))}]}
     save_pytree(tmp_path / "t.npz", tree)
     loaded = load_pytree(tmp_path / "t.npz", tree)
-    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded), strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
     save_train_state(tmp_path / "ckpt", 7, tree, extra={"note": "x"})
@@ -202,7 +202,7 @@ def test_synthetic_data_is_learnable_structure():
     big = set()
     reps = 0
     for row in toks:
-        for a, bb in zip(row[:-1], row[1:]):
+        for a, bb in zip(row[:-1], row[1:], strict=True):
             if (a, bb) in big:
                 reps += 1
             big.add((a, bb))

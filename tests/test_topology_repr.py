@@ -209,7 +209,7 @@ def test_replica_step_topology_dispatch_matches_dense():
         step = jax.jit(netes_dist.make_replica_train_step(
             cfg, ncfg, n, microbatch=1, topology=topo))
         out, _ = step(params, jnp.asarray(adj), batch, key)
-        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out), strict=True):
             np.testing.assert_allclose(
                 np.asarray(a, np.float32), np.asarray(b, np.float32),
                 rtol=2e-2, atol=2e-4, err_msg=representation)
